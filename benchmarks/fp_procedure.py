@@ -1,0 +1,32 @@
+"""Executable §3.3 FP-add procedure vs the closed-form coefficients.
+
+The full FP32 addition is executed step-accurately on the subarray
+simulator (exponent ripple-subtract, 2(Nm+2) search probes, O(Nm)
+flexible shift, 27-bit FA ripple, normalize) and its op tallies compared
+with the T_add coefficients. The search count matches exactly; the
+read/write events land within 2x because the simulator books each cache
+row write as a separate event where the paper's schedule counts one
+row-parallel step (same-row caches) — the executable path is the honest
+upper bound of the closed form.
+"""
+
+import numpy as np
+
+from repro.core.fp_procedure import subarray_fp32_add
+
+
+def run() -> list[str]:
+    rng = np.random.default_rng(0)
+    a = np.abs(rng.standard_normal(64)).astype(np.float32) * 8 + 1
+    b = np.minimum(np.abs(rng.standard_normal(64)).astype(np.float32),
+                   a * 0.9).astype(np.float32)
+    got, tally = subarray_fp32_add(a, b)
+    want = a + b
+    ulp = np.abs(got.view(np.uint32).astype(np.int64)
+                 - want.view(np.uint32).astype(np.int64)).max()
+    return [
+        f"fpproc.max_ulp_error,{ulp},truncation-vs-RNE",
+        f"fpproc.reads,{tally.read_events},formula=218",
+        f"fpproc.writes,{tally.write_events},formula=217",
+        f"fpproc.searches,{tally.search_events},formula=50",
+    ]

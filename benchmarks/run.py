@@ -1,0 +1,35 @@
+"""Benchmark harness — one module per paper table/figure (+ beyond-paper).
+
+Prints ``name,value,derived`` CSV rows. Usage:
+    PYTHONPATH=src python -m benchmarks.run [module ...]
+"""
+
+import sys
+
+from benchmarks import (arch_pim_cost, fa_steps, fig5_mac, fig6_training,
+                        fp_procedure, kernel_bench, roofline, table1_cell,
+                        ultrafast_ablation)
+
+MODULES = {
+    "table1_cell": table1_cell,
+    "fig5_mac": fig5_mac,
+    "fig6_training": fig6_training,
+    "fa_steps": fa_steps,
+    "fp_procedure": fp_procedure,
+    "ultrafast_ablation": ultrafast_ablation,
+    "arch_pim_cost": arch_pim_cost,
+    "roofline": roofline,
+    "kernel_bench": kernel_bench,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(MODULES)
+    print("name,value,derived")
+    for name in names:
+        for row in MODULES[name].run():
+            print(row)
+
+
+if __name__ == "__main__":
+    main()

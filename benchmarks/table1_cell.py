@@ -1,0 +1,23 @@
+"""Table 1 — SOT-MRAM cell parameters and the derived per-op terms."""
+
+from repro.core import cell
+
+
+def run() -> list[str]:
+    p = cell.MRAMCellParams()
+    ops = cell.derive_sot_mram_costs(p)
+    uf = cell.derive_ultrafast_costs(p)
+    rows = [
+        f"table1.r_on_kohm,{p.r_on_ohm/1e3:.0f},paper=50",
+        f"table1.r_off_kohm,{p.r_off_ohm/1e3:.0f},paper=100",
+        f"table1.v_b_mV,{p.v_b*1e3:.0f},paper=600",
+        f"table1.i_write_uA,{p.i_write_a*1e6:.0f},paper=65",
+        f"table1.t_switch_ns,{p.t_switch_s*1e9:.1f},paper=2.0",
+        f"table1.e_switch_fJ,{p.e_switch_j*1e15:.1f},paper=12.0",
+        f"derived.t_read_ns,{ops.t_read_s*1e9:.2f},",
+        f"derived.t_write_ns,{ops.t_write_s*1e9:.2f},",
+        f"derived.e_read_fJ,{ops.e_read_j*1e15:.2f},",
+        f"derived.e_write_fJ,{ops.e_write_j*1e15:.2f},",
+        f"derived.ultrafast_t_write_ns,{uf.t_write_s*1e9:.2f},[15]",
+    ]
+    return rows

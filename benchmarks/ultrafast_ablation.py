@@ -1,0 +1,15 @@
+"""§4.2 ablation — ultra-fast switching SOT-MRAM [15]: paper reports the
+MAC latency drops by 56.7%."""
+
+from repro.core import cost
+
+
+def run() -> list[str]:
+    base = cost.proposed_mac_cost()
+    uf = cost.ultrafast_mac_cost()
+    red = 1 - uf.t_mac_s / base.t_mac_s
+    return [
+        f"ultrafast.base_t_mac_us,{base.t_mac_s*1e6:.3f},",
+        f"ultrafast.fast_t_mac_us,{uf.t_mac_s*1e6:.3f},",
+        f"ultrafast.latency_reduction_pct,{red*100:.1f},paper=56.7",
+    ]

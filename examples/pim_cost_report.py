@@ -1,0 +1,28 @@
+"""PIM cost report for every assigned architecture: what training one
+sequence would cost on the paper's accelerator vs FloatPIM.
+
+    PYTHONPATH=src python examples/pim_cost_report.py
+"""
+
+from repro import configs
+from repro.core import estimator
+
+
+def main() -> None:
+    print(f"{'arch':28s} {'params':>9s} {'E/seq (ours)':>14s} "
+          f"{'E/seq (FloatPIM)':>17s} {'ratio':>6s}")
+    for arch in configs.ARCH_IDS:
+        cfg = configs.get_config(arch)
+        n = cfg.param_count()
+        counts = estimator.OpCounts(macs=3 * n * 4096)
+        ours = estimator.pim_estimate(counts, "proposed",
+                                      weight_bits=n * 32)
+        them = estimator.pim_estimate(counts, "floatpim",
+                                      weight_bits=n * 32)
+        print(f"{arch:28s} {n/1e9:8.2f}B {ours.energy_j/1e3:12.2f}kJ "
+              f"{them.energy_j/1e3:15.2f}kJ "
+              f"{them.energy_j/ours.energy_j:6.2f}")
+
+
+if __name__ == "__main__":
+    main()

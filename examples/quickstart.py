@@ -1,0 +1,45 @@
+"""Quickstart: the paper's PIM arithmetic + cost model in five minutes.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (estimator, fp, mac_comparison, training_comparison)
+
+
+def main() -> None:
+    # 1. bit-exact in-memory floating point (the §3.3 procedures)
+    a = jnp.asarray(np.float32([1.5, -2.25, 3.14159e7, 1e-8]))
+    b = jnp.asarray(np.float32([2.5, 0.125, -2.71828e-3, 4.0]))
+    print("PIM  add:", np.asarray(fp.fp32_add_pim(a, b)))
+    print("IEEE add:", np.asarray(a + b))
+    print("PIM  mul:", np.asarray(fp.fp32_mul_pim(a, b)))
+    print("IEEE mul:", np.asarray(a * b))
+    assert (np.asarray(fp.fp32_mul_pim(a, b)).view(np.uint32)
+            == np.asarray(a * b).view(np.uint32)).all()
+    print("bit-exact: yes\n")
+
+    # 2. MAC-level comparison vs FloatPIM (Fig. 5)
+    c = mac_comparison()
+    print(f"MAC energy ratio (FloatPIM/ours): {c['energy_ratio']:.2f}x "
+          "(paper: 3.3x)")
+    print(f"MAC latency ratio:               {c['latency_ratio']:.2f}x "
+          "(paper: 1.8x)\n")
+
+    # 3. LeNet training comparison (Fig. 6)
+    t = training_comparison()
+    print(f"LeNet training: area {t['area_ratio']:.2f}x, "
+          f"latency {t['latency_ratio']:.2f}x, "
+          f"energy {t['energy_ratio']:.2f}x (paper: 2.5/1.8/3.3)\n")
+
+    # 4. price YOUR computation on the PIM accelerator
+    f = lambda x, w: jnp.tanh(x @ w)
+    rep = estimator.estimate_fn(f, jnp.zeros((128, 256)),
+                                jnp.zeros((256, 512)))
+    print("custom fn on PIM:", rep.summary())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dry-run artifacts.
+
+    PYTHONPATH=src python scripts/gen_tables.py experiments/dryrun > out.md
+"""
+
+import json
+import pathlib
+import sys
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_ROOT / "src"))
+sys.path.insert(0, str(_ROOT))
+
+from repro import configs                      # noqa: E402
+from repro.configs.base import LM_SHAPES       # noqa: E402
+from benchmarks.roofline import model_flops    # noqa: E402
+
+
+def main(d: str) -> None:
+    base = pathlib.Path(d)
+    print("### Dry-run table (peak per-device memory, compile status)\n")
+    print("| arch | shape | mesh | status | peak GiB/dev | lower s | "
+          "compile s |")
+    print("|---|---|---|---|---|---|---|")
+    for arch in configs.ARCH_IDS:
+        for sh in LM_SHAPES:
+            for mesh in ("pod16x16", "pod2x16x16"):
+                p = base / f"{arch}__{sh.name}__{mesh}.json"
+                if not p.exists():
+                    continue
+                r = json.loads(p.read_text())
+                if r["status"] == "skipped":
+                    print(f"| {arch} | {sh.name} | {mesh} | skipped "
+                          f"(full-attention, see DESIGN §4) | — | — | — |")
+                    continue
+                if r["status"] != "ok":
+                    print(f"| {arch} | {sh.name} | {mesh} | ERROR | — | — "
+                          f"| — |")
+                    continue
+                pk = r["memory"]["peak_per_device_bytes"] / 2**30
+                print(f"| {arch} | {sh.name} | {mesh} | ok | {pk:.2f} | "
+                      f"{r['lower_s']} | {r['compile_s']} |")
+
+    print("\n### Roofline table (seconds per step per chip)\n")
+    print("| arch | shape | mesh | compute | memory (model) | collective | "
+          "dominant | MODEL_FLOPS/HLO | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for arch in configs.ARCH_IDS:
+        cfg = configs.get_config(arch)
+        for sh in LM_SHAPES:
+            for mesh in ("pod16x16", "pod2x16x16"):
+                p = base / f"{arch}__{sh.name}__{mesh}.json"
+                if not p.exists():
+                    continue
+                r = json.loads(p.read_text())
+                if r["status"] != "ok":
+                    continue
+                rl = r["roofline"]
+                mf = model_flops(cfg, sh)
+                useful = mf / r["chips"] / max(
+                    r["cost"].get("jaxpr_flops_global", 0)
+                    / r["chips"], 1e-9)
+                dom_v = max(rl["compute_s"], rl["memory_s"],
+                            rl["collective_s"])
+                frac = rl["compute_s"] / dom_v if dom_v else 0
+                print(f"| {arch} | {sh.name} | {mesh} | "
+                      f"{rl['compute_s']:.3g} | {rl['memory_s']:.3g} | "
+                      f"{rl['collective_s']:.3g} | "
+                      f"{rl['dominant'].replace('_s','')} | {useful:.2f} | "
+                      f"{frac:.2f} |")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun")

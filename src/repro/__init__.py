@@ -1,0 +1,8 @@
+"""repro: SOT-MRAM digital PIM training accelerator (Wang et al., 2020)
+reproduced and extended as a production-grade multi-pod JAX framework.
+
+Subpackages: core (the paper), models, configs, kernels (Pallas),
+parallel, optim, data, checkpoint, train, launch. See README.md.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,7 @@
+from repro.checkpoint.ckpt import (
+    CheckpointManager,
+    load_checkpoint,
+    save_checkpoint,
+)
+
+__all__ = ["CheckpointManager", "load_checkpoint", "save_checkpoint"]

@@ -1,0 +1,54 @@
+"""Architecture registry: ``get_config(name)`` / ``get_smoke_config(name)``."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (
+    LM_SHAPES,
+    LONG_CONTEXT_ARCHS,
+    ArchConfig,
+    ShapeSpec,
+    shape_applicable,
+)
+
+ARCH_IDS = (
+    "xlstm-350m",
+    "llama4-maverick-400b-a17b",
+    "granite-moe-1b-a400m",
+    "qwen3-32b",
+    "chatglm3-6b",
+    "llama3-8b",
+    "qwen2.5-32b",
+    "musicgen-medium",
+    "qwen2-vl-2b",
+    "zamba2-7b",
+)
+
+_MODULES = {
+    "xlstm-350m": "xlstm_350m",
+    "llama4-maverick-400b-a17b": "llama4_maverick",
+    "granite-moe-1b-a400m": "granite_moe",
+    "qwen3-32b": "qwen3_32b",
+    "chatglm3-6b": "chatglm3_6b",
+    "llama3-8b": "llama3_8b",
+    "qwen2.5-32b": "qwen2_5_32b",
+    "musicgen-medium": "musicgen_medium",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "zamba2-7b": "zamba2_7b",
+}
+
+
+def get_config(name: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG
+
+
+def get_smoke_config(name: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.smoke_config()
+
+
+__all__ = ["ARCH_IDS", "ArchConfig", "ShapeSpec", "LM_SHAPES",
+           "LONG_CONTEXT_ARCHS", "get_config", "get_smoke_config",
+           "shape_applicable"]

@@ -1,0 +1,60 @@
+"""Core PIM library — the paper's contribution.
+
+Public API:
+  * bit-exact PIM floating point:  fp32_add_pim, fp32_mul_pim, fp32_mac_pim
+  * the 4-step FA + subarray state machine:  proposed_fa, Subarray
+  * closed-form costs (paper §3.3):  proposed_mac_cost, floatpim_mac_cost,
+    mac_comparison
+  * whole-DNN training simulator (Fig. 6):  PIMAccelerator,
+    training_comparison
+  * cost estimation for any JAX fn:  count_ops, estimate_fn, pim_estimate
+"""
+
+from repro.core.accelerator import (
+    PIMAccelerator,
+    lenet_layers,
+    training_comparison,
+)
+from repro.core.cell import (
+    MRAMCellParams,
+    OpCosts,
+    ReRAMCellParams,
+    derive_sot_mram_costs,
+    derive_ultrafast_costs,
+)
+from repro.core.cost import (
+    FloatPIMParams,
+    MacCost,
+    floatpim_mac_cost,
+    mac_comparison,
+    proposed_mac_breakdown,
+    proposed_mac_cost,
+    ultrafast_mac_cost,
+)
+from repro.core.estimator import (
+    OpCounts,
+    PIMReport,
+    count_ops,
+    estimate_fn,
+    flops_estimate,
+    pim_estimate,
+)
+from repro.core.fp import (
+    fp32_add_pim,
+    fp32_mac_pim,
+    fp32_mul_pim,
+    pim_add,
+    pim_dot,
+)
+from repro.core.fulladder import (
+    FLOATPIM_FA_CELLS,
+    FLOATPIM_FA_STEPS,
+    PROPOSED_FA_CELLS,
+    PROPOSED_FA_STEPS,
+    floatpim_fa,
+    multibit_add,
+    proposed_fa,
+)
+from repro.core.subarray import Subarray
+
+__all__ = [k for k in dir() if not k.startswith("_")]

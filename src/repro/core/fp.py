@@ -1,0 +1,350 @@
+"""Bit-plane IEEE-754 float32 add/mul built from the PIM full-adder primitive.
+
+This is the *functional* reproduction of the paper's §3.3 floating point
+computation, vectorized in JAX:
+
+  * a number is a **bit-plane** array ``[..., n]`` of {0,1} int32, LSB first —
+    the batch dimensions are the subarray's column-parallelism (each lane is
+    one column), ``lax.scan`` over bit index is the bit-serial row schedule;
+  * every multi-bit addition ripples through the paper's FA equations
+    (S = X^Y^Z, Z' = XY + Z(X^Y)) — the same boolean ops the 4-step FA
+    executes in-array (``repro.core.fulladder``);
+  * exponent alignment uses a **flexible multi-bit shift** (the paper's O(Nm)
+    method enabled by the 1T-1R cell, vs FloatPIM's bit-by-bit O(Nm^2));
+  * mantissa multiplication is **shift-and-add** with a ping-pong accumulator
+    (Fig. 4b).
+
+Semantics: IEEE-754 binary32, round-to-nearest-even, with subnormals
+flushed to zero (paper does not specify subnormal handling; FloatPIM
+truncates — we are strictly more precise). NaN/Inf propagate per IEEE.
+
+Validated bit-exactly against XLA's native f32 ops in
+``tests/test_fp_bitexact.py`` (hypothesis property tests).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+N_MANT = 23
+N_EXP = 8
+BIAS = 127
+
+# ---------------------------------------------------------------------------
+# bit-plane helpers
+# ---------------------------------------------------------------------------
+
+
+def u32_to_bits(x: jnp.ndarray, n: int) -> jnp.ndarray:
+    """uint32/int32 -> [..., n] bit planes, LSB first."""
+    x = x.astype(jnp.uint32)
+    shifts = jnp.arange(n, dtype=jnp.uint32)
+    return ((x[..., None] >> shifts) & jnp.uint32(1)).astype(jnp.int32)
+
+
+def bits_to_u32(bits: jnp.ndarray) -> jnp.ndarray:
+    n = bits.shape[-1]
+    shifts = jnp.arange(n, dtype=jnp.uint32)
+    return jnp.sum(bits.astype(jnp.uint32) << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def fa_bit(x, y, z):
+    """The paper's FA equations — the single PIM logic primitive (eq. 1)."""
+    s = x ^ y ^ z
+    carry = (x & y) | (z & (x ^ y))
+    return s, carry
+
+
+def pim_add(a_bits: jnp.ndarray, b_bits: jnp.ndarray, cin=None):
+    """Ripple-carry addition of two bit-plane numbers via scan of the FA.
+
+    Returns (sum_bits [..., n], carry_out [...]).
+    """
+    n = a_bits.shape[-1]
+    assert b_bits.shape[-1] == n
+    a_t = jnp.moveaxis(a_bits, -1, 0)
+    b_t = jnp.moveaxis(b_bits, -1, 0)
+    if cin is None:
+        cin = jnp.zeros(a_t.shape[1:], dtype=a_bits.dtype)
+    else:
+        cin = jnp.broadcast_to(jnp.asarray(cin, a_bits.dtype), a_t.shape[1:])
+
+    def body(carry, xy):
+        x, y = xy
+        s, c = fa_bit(x, y, carry)
+        return c, s
+
+    carry_out, s_t = jax.lax.scan(body, cin, (a_t, b_t))
+    return jnp.moveaxis(s_t, 0, -1), carry_out
+
+
+def pim_sub(a_bits: jnp.ndarray, b_bits: jnp.ndarray):
+    """a - b (requires a >= b for an unsigned-correct result)."""
+    s, _ = pim_add(a_bits, 1 - b_bits, cin=1)
+    return s
+
+
+def pim_inc_at(bits: jnp.ndarray, inc: jnp.ndarray):
+    """bits + inc (inc in {0,1} per element) -> (bits, carry_out)."""
+    one = jnp.zeros_like(bits)
+    one = one.at[..., 0].set(inc.astype(bits.dtype))
+    return pim_add(bits, one)
+
+
+def shift_right_sticky(bits: jnp.ndarray, k: jnp.ndarray):
+    """Flexible multi-bit right shift (the 1T-1R 'flexible bits' shift, §3.3).
+
+    ``k`` >= 0, per-element. Returns (shifted, sticky) where sticky = OR of
+    the shifted-out bits.
+    """
+    n = bits.shape[-1]
+    idx = jnp.arange(n)
+    k = jnp.broadcast_to(jnp.asarray(k), bits.shape[:-1])[..., None]
+    src = idx + k
+    valid = src < n
+    gathered = jnp.take_along_axis(
+        bits, jnp.clip(src, 0, n - 1).astype(jnp.int32), axis=-1)
+    shifted = jnp.where(valid, gathered, 0)
+    sticky = jnp.max(jnp.where(idx < k, bits, 0), axis=-1)
+    return shifted, sticky
+
+
+def shift_left(bits: jnp.ndarray, k: jnp.ndarray):
+    """Flexible multi-bit left shift, zeros in, drops overflowed bits."""
+    n = bits.shape[-1]
+    idx = jnp.arange(n)
+    k = jnp.broadcast_to(jnp.asarray(k), bits.shape[:-1])[..., None]
+    src = idx - k
+    valid = src >= 0
+    gathered = jnp.take_along_axis(
+        bits, jnp.clip(src, 0, n - 1).astype(jnp.int32), axis=-1)
+    return jnp.where(valid, gathered, 0)
+
+
+def msb_position(bits: jnp.ndarray) -> jnp.ndarray:
+    """Index of the most significant set bit; -1 if zero."""
+    n = bits.shape[-1]
+    idx = jnp.arange(n)
+    return jnp.max(jnp.where(bits > 0, idx, -1), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# float32 unpack / pack
+# ---------------------------------------------------------------------------
+
+
+def unpack_f32(x: jnp.ndarray):
+    u = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    sign = (u >> 31).astype(jnp.int32)
+    exp = ((u >> 23) & jnp.uint32(0xFF)).astype(jnp.int32)
+    mant = (u & jnp.uint32(0x7FFFFF)).astype(jnp.int32)
+    return u, sign, exp, mant
+
+
+def pack_f32(sign: jnp.ndarray, exp: jnp.ndarray, mant: jnp.ndarray):
+    u = ((sign.astype(jnp.uint32) << 31)
+         | (exp.astype(jnp.uint32) << 23)
+         | mant.astype(jnp.uint32))
+    return jax.lax.bitcast_convert_type(u, jnp.float32)
+
+
+def _round_rne(keep_lsb, guard, rnd, sticky):
+    """Round-to-nearest-even increment decision."""
+    return (guard & (rnd | sticky | keep_lsb)).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# floating point addition (paper §3.3 'Addition')
+# ---------------------------------------------------------------------------
+
+_W_ADD = N_MANT + 6  # 24 significand + 3 GRS + 1 carry headroom + 1 spare
+
+
+@functools.partial(jax.jit)
+def fp32_add_pim(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """IEEE-754 f32 addition through the PIM bit-plane procedure."""
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    ua, sa, ea, ma = unpack_f32(a)
+    ub, sb, eb, mb = unpack_f32(b)
+
+    # FTZ on inputs: subnormals (exp==0, mant!=0) treated as zero.
+    a_zero = ea == 0
+    b_zero = eb == 0
+
+    # order so |x| >= |y| (compare biased exp then mantissa).
+    mag_a = (ea.astype(jnp.uint32) << 23) | ma.astype(jnp.uint32)
+    mag_b = (eb.astype(jnp.uint32) << 23) | mb.astype(jnp.uint32)
+    swap = mag_b > mag_a
+    sx = jnp.where(swap, sb, sa)
+    ex = jnp.where(swap, eb, ea)
+    mx = jnp.where(swap, mb, ma)
+    sy = jnp.where(swap, sa, sb)
+    ey = jnp.where(swap, ea, eb)
+    my = jnp.where(swap, ma, mb)
+
+    # significands with implicit 1, pre-shifted by 3 for G/R/S headroom.
+    sig_x = ((jnp.uint32(1) << 23) | mx.astype(jnp.uint32)) << 3
+    sig_y = ((jnp.uint32(1) << 23) | my.astype(jnp.uint32)) << 3
+    bx = u32_to_bits(sig_x, _W_ADD)
+    by = u32_to_bits(sig_y, _W_ADD)
+
+    # exponent alignment — the 'search' + flexible shift (cost: O(Nm)).
+    d = jnp.clip(ex - ey, 0, _W_ADD)
+    by_sh, sticky_align = shift_right_sticky(by, d)
+    # OR the sticky into bit 0 so effective-subtract borrows correctly.
+    by_sh = by_sh.at[..., 0].set(by_sh[..., 0] | sticky_align)
+
+    eff_sub = sx != sy
+    # width 29 has headroom: operands peak at bit 26, the add-path carry
+    # lands in bit 27 inside the ripple sum itself (carry_out always 0).
+    sum_add, _ = pim_add(bx, by_sh)
+    sum_sub = pim_sub(bx, by_sh)
+    v = jnp.where(eff_sub[..., None], sum_sub, sum_add)
+
+    # normalize so MSB sits at position 26 (= N_MANT + 3).
+    p = msb_position(v)
+    target = N_MANT + 3
+    is_zero_res = p < 0
+    shl = jnp.clip(target - p, 0, _W_ADD)
+    shr = jnp.clip(p - target, 0, 1)        # at most 1 (carry case)
+    v_n, sticky_n = shift_right_sticky(shift_left(v, shl), shr)
+    e_res = ex + (p - target)
+
+    keep = v_n[..., 3:3 + 24]
+    guard = v_n[..., 2]
+    rnd = v_n[..., 1]
+    sticky = v_n[..., 0] | sticky_n
+    inc = _round_rne(keep[..., 0], guard, rnd, sticky)
+    keep_r, carry_r = pim_inc_at(keep, inc)
+    # rounding overflow: significand became 2.0 -> shift right, exp+1.
+    keep_r = jnp.where(carry_r[..., None] > 0,
+                       shift_right_sticky(keep_r, 1)[0], keep_r)
+    keep_r = keep_r.at[..., 23].set(
+        jnp.where(carry_r > 0, 1, keep_r[..., 23]))
+    e_res = e_res + carry_r
+
+    mant_res = (bits_to_u32(keep_r) & jnp.uint32(0x7FFFFF)).astype(jnp.int32)
+    # result sign: sign of the larger-magnitude operand; exact-zero result
+    # gets +0 (RNE rule).
+    s_res = jnp.where(is_zero_res, 0, sx)
+    e_out = jnp.where(is_zero_res, 0, e_res)
+    m_out = jnp.where(is_zero_res, 0, mant_res)
+    # underflow -> FTZ; overflow -> inf.
+    underflow = e_out <= 0
+    overflow = e_out >= 255
+    e_out = jnp.where(underflow, 0, jnp.where(overflow, 255, e_out))
+    m_out = jnp.where(underflow | overflow, 0, m_out)
+    res = pack_f32(s_res, e_out, m_out)
+
+    # special cases, resolved with XLA's own semantics where IEEE mandates:
+    a_nan = jnp.isnan(a)
+    b_nan = jnp.isnan(b)
+    a_inf = jnp.isinf(a)
+    b_inf = jnp.isinf(b)
+    naive = a + b  # used ONLY for NaN/Inf propagation paths
+    res = jnp.where(a_zero & b_zero, naive, res)
+    res = jnp.where(a_zero & ~b_zero, b, res)
+    res = jnp.where(b_zero & ~a_zero, a, res)
+    res = jnp.where(a_nan | b_nan | a_inf | b_inf, naive, res)
+    return res
+
+
+# ---------------------------------------------------------------------------
+# floating point multiplication (paper §3.3 'Multiplication', Fig. 4b)
+# ---------------------------------------------------------------------------
+
+_W_MUL = 2 * (N_MANT + 1) + 1  # 49: 48-bit product + headroom
+
+
+@functools.partial(jax.jit)
+def fp32_mul_pim(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """IEEE-754 f32 multiplication via PIM shift-and-add (ping-pong acc)."""
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    _, sa, ea, ma = unpack_f32(a)
+    _, sb, eb, mb = unpack_f32(b)
+    a_zero = ea == 0
+    b_zero = eb == 0
+
+    sig_a = (jnp.uint32(1) << 23) | ma.astype(jnp.uint32)
+    sig_b = (jnp.uint32(1) << 23) | mb.astype(jnp.uint32)
+    bits_a = u32_to_bits(sig_a, _W_MUL)     # multiplicand, full width
+    bits_b = u32_to_bits(sig_b, N_MANT + 1)  # multiplier bits, scanned
+
+    # shift-and-add: acc += (A << k) if B_k — Fig. 4b. The two intermediate
+    # columns of the ping-pong scheme map to the scan carry (acc) and the
+    # freshly written partial sum.
+    bits_b_t = jnp.moveaxis(bits_b, -1, 0)  # [24, ...]
+
+    def body2(carry, inp):
+        acc, shifted_a = carry
+        bk = inp
+        partial = shifted_a * bk[..., None]
+        acc_next, _ = pim_add(acc, partial)
+        shifted_next = shift_left(shifted_a, 1)
+        return (acc_next, shifted_next), None
+
+    acc0 = jnp.zeros_like(bits_a)
+    (acc, _), _ = jax.lax.scan(body2, (acc0, bits_a), bits_b_t)
+
+    # normalize: product of two [1,2) significands is in [1,4): MSB at 46 or 47.
+    top = acc[..., 47]
+    e_res = ea + eb - BIAS + top
+
+    # select the 24-bit significand + G + sticky depending on `top`.
+    def extract(acc, hi):
+        keep = jax.lax.dynamic_slice_in_dim(acc, hi - 23, 24, axis=-1)
+        guard = acc[..., hi - 24]
+        idx = jnp.arange(_W_MUL)
+        sticky = jnp.max(jnp.where(idx < hi - 24, acc, 0), axis=-1)
+        return keep, guard, sticky
+
+    keep1, g1, s1 = extract(acc, 47)
+    keep0, g0, s0 = extract(acc, 46)
+    keep = jnp.where(top[..., None] > 0, keep1, keep0)
+    guard = jnp.where(top > 0, g1, g0)
+    sticky = jnp.where(top > 0, s1, s0)
+
+    inc = _round_rne(keep[..., 0], guard, jnp.zeros_like(guard), sticky)
+    # note: with only G and S available, fold R into S (R's bit is part of
+    # the sticky OR above) — equivalent for RNE.
+    keep_r, carry_r = pim_inc_at(keep, inc)
+    keep_r = jnp.where(carry_r[..., None] > 0,
+                       shift_right_sticky(keep_r, 1)[0], keep_r)
+    keep_r = keep_r.at[..., 23].set(jnp.where(carry_r > 0, 1, keep_r[..., 23]))
+    e_res = e_res + carry_r
+
+    mant_res = (bits_to_u32(keep_r) & jnp.uint32(0x7FFFFF)).astype(jnp.int32)
+    s_res = sa ^ sb
+    underflow = e_res <= 0
+    overflow = e_res >= 255
+    e_out = jnp.where(underflow, 0, jnp.where(overflow, 255, e_res))
+    m_out = jnp.where(underflow | overflow, 0, mant_res)
+    res = pack_f32(s_res, jnp.where(overflow, 255, e_out), m_out)
+    res = jnp.where(overflow, pack_f32(s_res, jnp.full_like(e_out, 255),
+                                       jnp.zeros_like(m_out)), res)
+
+    naive = a * b
+    special = (a_zero | b_zero | jnp.isnan(a) | jnp.isnan(b)
+               | jnp.isinf(a) | jnp.isinf(b))
+    return jnp.where(special, naive, res)
+
+
+def fp32_mac_pim(a: jnp.ndarray, b: jnp.ndarray, acc: jnp.ndarray):
+    """One PIM MAC: acc + a*b (the unit benchmarked in Fig. 5)."""
+    return fp32_add_pim(fp32_mul_pim(a, b), acc)
+
+
+def pim_dot(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Dot product via sequential PIM MACs (reference for kernels/pim_fp)."""
+    assert a.ndim == 1 and b.ndim == 1
+
+    def body(acc, ab):
+        return fp32_mac_pim(ab[0], ab[1], acc), None
+
+    acc, _ = jax.lax.scan(body, jnp.float32(0.0), (a, b))
+    return acc

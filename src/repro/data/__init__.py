@@ -1,0 +1,7 @@
+from repro.data.pipeline import (
+    DigitsDataset,
+    TokenStream,
+    make_digits,
+)
+
+__all__ = ["DigitsDataset", "TokenStream", "make_digits"]

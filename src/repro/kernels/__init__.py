@@ -1,0 +1,18 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU):
+
+  * ``pim_mac`` / ``pim_matmul`` — the paper's MAC/GEMM dataflow, TPU-tiled
+  * ``pim_fp32_mul``             — bit-serial shift-and-add f32 multiply
+                                   (Fig. 4b), bit-exact IEEE-754
+  * ``flash_attention``          — causal GQA attention, online softmax in
+                                   VMEM scratch (never writes S x S to HBM)
+
+``ops`` holds the jit'd public wrappers; ``ref`` the pure-jnp oracles.
+"""
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.pim_fp import pim_fp32_mul
+from repro.kernels.pim_mac import pim_mac, pim_matmul
+
+__all__ = ["ops", "ref", "flash_attention", "pim_fp32_mul", "pim_mac",
+           "pim_matmul"]

@@ -1,0 +1,113 @@
+"""Causal GQA flash attention as a Pallas TPU kernel.
+
+The paper's core efficiency insight — *never write intermediates out of the
+array* (FloatPIM's 455-cell writes are its energy bottleneck) — maps onto
+TPU attention as: never write the [S, S] score matrix to HBM. This kernel
+keeps the online-softmax state (acc, m, l) in VMEM scratch across the KV
+grid axis and writes only the [qc, D] output tile.
+
+Grid: (B, H, S/qc, S/kc), KV innermost ("arbitrary" = sequential on TPU so
+scratch carries). GQA is handled in the BlockSpec index map (kv head =
+h // (H/G)) — no repeated-KV materialization. Fully-masked blocks
+(kv block entirely in the causal future) are skipped with ``pl.when``.
+
+Validated against ``ref.flash_attention_ref`` in interpret mode across a
+shape/dtype sweep; ``repro.models.attention.flash_attention_xla`` is the
+mathematically identical XLA fallback used on non-TPU backends.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  qc: int, kc: int, n_k: int, scale: float):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # skip kv blocks strictly in the causal future of this q block
+    @pl.when(ik * kc <= iq * qc + qc - 1)
+    def _compute():
+        q = q_ref[0, 0]                    # [qc, D]
+        k = k_ref[0, 0]                    # [kc, D]
+        v = v_ref[0, 0]
+        sc = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        q_pos = iq * qc + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 0)
+        k_pos = ik * kc + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 1)
+        sc = jnp.where(q_pos >= k_pos, sc, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, sc.max(axis=-1, keepdims=True))
+        p = jnp.exp(sc - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = (acc_ref[...] * alpha
+                        + jnp.dot(p.astype(v.dtype), v,
+                                  preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-20)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("q_chunk", "kv_chunk", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    q_chunk: int = 256, kv_chunk: int = 256,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q: [B,S,H,D]; k/v: [B,S,G,D] -> [B,S,H,D] (causal)."""
+    b, s, h, d = q.shape
+    g = k.shape[2]
+    rep = h // g
+    qc = min(q_chunk, s)
+    kc = min(kv_chunk, s)
+    assert s % qc == 0 and s % kc == 0
+    nq, nk = s // qc, s // kc
+    scale = 1.0 / math.sqrt(d)
+
+    # layout: [B,H,S,D] blocks; kv head via index map (GQA — no repeat)
+    qt = jnp.moveaxis(q, 2, 1)            # [B,H,S,D]
+    kt = jnp.moveaxis(k, 2, 1)            # [B,G,S,D]
+    vt = jnp.moveaxis(v, 2, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, qc=qc, kc=kc, n_k=nk, scale=scale),
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, qc, d),
+                         lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, kc, d),
+                         lambda ib, ih, iq, ik: (ib, ih // rep, ik, 0)),
+            pl.BlockSpec((1, 1, kc, d),
+                         lambda ib, ih, iq, ik: (ib, ih // rep, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qc, d),
+                               lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qc, d), jnp.float32),
+            pltpu.VMEM((qc, 1), jnp.float32),
+            pltpu.VMEM((qc, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(qt, kt, vt)
+    return jnp.moveaxis(out, 1, 2)        # [B,S,H,D]

@@ -1,0 +1,37 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container) and False on TPU —
+the BlockSpecs target TPU VMEM either way; interpret mode executes the same
+kernel body in Python for correctness validation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import pim_mac as _pm
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def mac(a, b, acc, *, block: int = 1024):
+    """Elementwise PIM MAC: acc + a*b (paper Fig. 5 unit, TPU-tiled)."""
+    return _pm.pim_mac(a, b, acc, block=block,
+                       interpret=_default_interpret())
+
+
+def matmul(a, b, *, bm: int = 128, bn: int = 128, bk: int = 128):
+    """Blocked f32 matmul with VMEM scratch accumulation."""
+    return _pm.pim_matmul(a, b, bm=bm, bn=bn, bk=bk,
+                          interpret=_default_interpret())
+
+
+def attention(q, k, v, *, q_chunk: int = 256, kv_chunk: int = 256):
+    """Causal GQA flash attention (Pallas kernel; XLA fallback lives in
+    repro.models.attention.flash_attention_xla)."""
+    return _fa.flash_attention(q, k, v, q_chunk=q_chunk, kv_chunk=kv_chunk,
+                               interpret=_default_interpret())

@@ -1,0 +1,108 @@
+"""PIM MAC / matmul as Pallas TPU kernels — the hardware adaptation of the
+paper's compute unit (DESIGN.md §2, layer 3).
+
+Mapping of the paper's structures onto TPU (this is an *adaptation*, not an
+emulation — the PIM array's physics have no TPU analogue, its dataflow
+does):
+
+  paper (SOT-MRAM subarray)            TPU kernel
+  -----------------------------------  ----------------------------------
+  1024-column parallel MACs            VMEM lane dimension (8x128 tiles)
+  operands stay in-array (no movement) operands stay in VMEM across the
+                                       K-loop (BlockSpec reuse)
+  ping-pong accumulator columns        f32 VMEM scratch accumulator that
+                                       alternates role across grid steps
+  455-cell intermediate writes (the    never spill partial products to
+  FloatPIM flaw the paper fixes)       HBM — accumulate in scratch only
+
+``pim_mac``    — elementwise fused multiply-add over tiles.
+``pim_matmul`` — blocked matmul, grid (M/bm, N/bn, K/bk), accumulating in
+                 VMEM scratch, writing the output tile once on the last K
+                 step (K innermost = sequential on TPU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ---------------------------------------------------------------------------
+# elementwise MAC
+# ---------------------------------------------------------------------------
+
+
+def _mac_kernel(a_ref, b_ref, acc_ref, o_ref):
+    o_ref[...] = acc_ref[...] + a_ref[...] * b_ref[...]
+
+
+def pim_mac(a: jnp.ndarray, b: jnp.ndarray, acc: jnp.ndarray,
+            *, block: int = 1024, interpret: bool = True) -> jnp.ndarray:
+    """Elementwise acc + a*b, tiled along the last dim."""
+    assert a.shape == b.shape == acc.shape
+    orig_shape = a.shape
+    n = a.size
+    pad = (-n) % block
+    def prep(x):
+        return jnp.pad(x.reshape(-1), (0, pad)).reshape(-1, block)
+    a2, b2, acc2 = prep(a), prep(b), prep(acc)
+    rows = a2.shape[0]
+    out = pl.pallas_call(
+        _mac_kernel,
+        grid=(rows,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))] * 3,
+        out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, block), acc.dtype),
+        interpret=interpret,
+    )(a2, b2, acc2)
+    return out.reshape(-1)[:n].reshape(orig_shape)
+
+
+# ---------------------------------------------------------------------------
+# blocked matmul with scratch accumulation
+# ---------------------------------------------------------------------------
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(ik == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def pim_matmul(a: jnp.ndarray, b: jnp.ndarray, *, bm: int = 128,
+               bn: int = 128, bk: int = 128,
+               interpret: bool = True) -> jnp.ndarray:
+    """f32 C = A @ B with (bm, bn, bk) VMEM tiles (MXU-aligned on TPU)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k)
+    n_k = k // bk
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b)

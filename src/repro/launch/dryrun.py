@@ -1,0 +1,358 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell against the production mesh, prove it fits (memory analysis),
+and extract the roofline terms (cost analysis + HLO collective bytes).
+
+MUST be run as its own process (the two lines above must execute before any
+jax import anywhere — jax locks the device count on first init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+        --shape train_4k [--multi-pod] [--out experiments/dryrun]
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all   # every cell
+
+Artifacts: one JSON per cell under --out; benchmarks/roofline.py and
+EXPERIMENTS.md §Dry-run/§Roofline are generated from them.
+"""
+
+import argparse
+import json
+import pathlib
+import re
+import time
+import traceback
+
+import jax
+
+from repro import configs
+from repro.configs.base import LM_SHAPES, shape_applicable
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_production_mesh
+from repro.parallel import sharding
+
+# -- TPU v5e constants (per system prompt) ---------------------------------
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str, body_multiplier: int = 1) -> dict:
+    """Sum operand bytes of every collective op in (per-partition) HLO.
+
+    XLA's cost/HLO accounting counts a while-loop body ONCE regardless of
+    trip count (verified: scan of 10 matmuls reports 1/10th the unrolled
+    flops). Collectives that live inside a while body — i.e. inside the
+    scan-over-layers — therefore execute ``body_multiplier`` (= layer trip
+    count) times per step. We collect the set of while-body computation
+    names and weight their collectives accordingly. Raw (unweighted)
+    totals are reported alongside.
+    """
+    body_names = set(re.findall(r"body=%?([\w.\-]+)", hlo_text))
+    totals = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    raw_totals = {k: 0 for k in _COLLECTIVES}
+    current_comp = ""
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        comp = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s+\([^)]*\)\s*->", stripped)
+        if comp and stripped.endswith("{"):
+            current_comp = comp.group(1)
+            continue
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*[^=]*?\b"
+                     r"(all-gather-start|all-gather|all-reduce-start|"
+                     r"all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute-start|collective-permute)\(",
+                     stripped)
+        if not m:
+            continue
+        op = m.group(1).replace("-start", "")
+        # bytes: prefer the RESULT type(s) (always printed between '=' and
+        # the op name; operand types are omitted in some dump modes). For
+        # all-gather the result is the gathered tensor = per-device receive
+        # volume; for all-reduce/permute result size == operand size.
+        head, _, tail = stripped.partition("=")
+        op_pos = tail.find(m.group(1))
+        result_part = tail[:op_pos] if op_pos > 0 else ""
+        op_bytes = sum(_shape_bytes(d, dims)
+                       for d, dims in _SHAPE_RE.findall(result_part))
+        if op_bytes == 0:
+            paren = stripped[stripped.index("("):]
+            op_bytes = sum(_shape_bytes(d, dims)
+                           for d, dims in _SHAPE_RE.findall(paren))
+        mult = body_multiplier if current_comp in body_names else 1
+        totals[op] += op_bytes * mult
+        raw_totals[op] += op_bytes
+        counts[op] += mult
+    return {"per_op_bytes": totals, "per_op_counts": counts,
+            "total_bytes": sum(totals.values()),
+            "raw_total_bytes": sum(raw_totals.values()),
+            "body_multiplier": body_multiplier}
+
+
+
+def _sharded_bytes(tree, shardings) -> int:
+    """Exact per-device bytes of a pytree given its NamedShardings."""
+    import numpy as np
+    total = 0
+    leaves = zip(jax.tree.leaves(tree), jax.tree.leaves(
+        shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding)))
+    for leaf, sh in leaves:
+        if not hasattr(leaf, "shape"):
+            continue
+        try:
+            shp = sh.shard_shape(tuple(leaf.shape))
+        except Exception:
+            shp = tuple(leaf.shape)
+        total += int(np.prod(shp, dtype=np.int64)) * jnp_itemsize(leaf.dtype)
+    return total
+
+
+def jnp_itemsize(dt) -> int:
+    import numpy as np
+    try:
+        return np.dtype(dt).itemsize
+    except TypeError:
+        return 2  # bf16
+
+
+def model_memory_bytes(cfg, shape, chips, *, p_chip: int, o_chip: int,
+                       cache_chip: int, trips: int) -> float:
+    """First-order *mandatory* HBM traffic per step per chip (roofline
+    memory term). Unlike HLO bytes_accessed (per-op operand bytes, a loose
+    pre-fusion upper bound), this counts traffic that must cross HBM:
+
+      train:   weights read fwd+bwd (+once more for remat recompute) per
+               microbatch, grads written+read, params written, optimizer
+               states read+written, remat carries written+read.
+      prefill: weights once + a few activation round-trips.
+      decode:  weights once + the KV/state cache read + written slice.
+    """
+    accum = max(getattr(cfg, "grad_accum", 1), 1)
+    if shape.kind == "train":
+        carry = trips * shape.global_batch * shape.seq_len * cfg.d_model * 2
+        carry_chip = carry / chips
+        return (3 * accum * p_chip          # fwd + bwd + remat re-read
+                + 3 * p_chip                # grad write+read, param write
+                + 2 * o_chip                # opt read + write
+                + 2 * carry_chip)           # carry write (fwd) + read (bwd)
+    if shape.kind == "prefill":
+        act = shape.global_batch * shape.seq_len * cfg.d_model * 2 / chips
+        return p_chip + 4 * act
+    # decode
+    return p_chip + cache_chip
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: pathlib.Path, optimizer: str = "adamw") -> dict:
+    cfg = configs.get_config(arch)
+    shape = next(s for s in LM_SHAPES if s.name == shape_name)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "kind": shape.kind}
+    if not shape_applicable(cfg, shape):
+        rec["status"] = "skipped"
+        rec["reason"] = ("long_500k requires sub-quadratic attention; "
+                        f"{arch} is pure full attention (DESIGN.md §4)")
+        _write(out_dir, rec)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = len(mesh.devices.reshape(-1))
+    rec["chips"] = n_chips
+    from repro.models.transformer import build_model
+    layout = build_model(cfg).layout
+    trips = layout.n_units
+    if shape.kind == "train":
+        # layer-body collectives run once per microbatch per layer
+        trips *= max(getattr(cfg, "grad_accum", 1), 1)
+    cs = steps_mod.cell_shardings(mesh, cfg, shape, optimizer_name=optimizer)
+    t0 = time.time()
+    try:
+        with mesh, sharding.use_rules(cs.rules):
+            if shape.kind == "train":
+                fn = steps_mod.make_train_step(cfg, optimizer_name=optimizer)
+                p = steps_mod.abstract_params(cfg)
+                o = steps_mod.abstract_opt_state(cfg, p, optimizer)
+                b = steps_mod.input_specs(cfg, shape)
+                jitted = jax.jit(
+                    fn,
+                    in_shardings=(cs.params, cs.opt_state, cs.batch),
+                    out_shardings=(cs.params, cs.opt_state, None),
+                    donate_argnums=(0, 1))
+                lowered = jitted.lower(p, o, b)
+            elif shape.kind == "prefill":
+                fn = steps_mod.make_prefill_step(cfg)
+                p = steps_mod.abstract_params(cfg)
+                b = steps_mod.input_specs(cfg, shape)
+                jitted = jax.jit(fn, in_shardings=(cs.params, cs.batch))
+                lowered = jitted.lower(p, b)
+            else:  # decode
+                fn = steps_mod.make_serve_step(cfg)
+                p = steps_mod.abstract_params(cfg)
+                c = steps_mod.abstract_cache(cfg, shape)
+                token, pos = steps_mod.decode_input_specs(cfg, shape)
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                jitted = jax.jit(
+                    fn,
+                    in_shardings=(cs.params, cs.cache, cs.token,
+                                  NamedSharding(mesh, P())),
+                    out_shardings=(None, cs.cache),
+                    donate_argnums=(1,))
+                lowered = jitted.lower(p, c, token, pos)
+            rec["lower_s"] = round(time.time() - t0, 2)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 2)
+
+            mem = compiled.memory_analysis()
+            rec["memory"] = {
+                "argument_size_bytes": int(mem.argument_size_in_bytes),
+                "output_size_bytes": int(mem.output_size_in_bytes),
+                "temp_size_bytes": int(mem.temp_size_in_bytes),
+                "alias_size_bytes": int(mem.alias_size_in_bytes),
+                "peak_per_device_bytes": int(
+                    mem.argument_size_in_bytes + mem.output_size_in_bytes
+                    + mem.temp_size_in_bytes - mem.alias_size_in_bytes),
+            }
+            ca = compiled.cost_analysis()
+            rec["cost"] = {
+                "flops": float(ca.get("flops", 0.0)),
+                "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+                "transcendentals": float(ca.get("transcendentals", 0.0)),
+            }
+            hlo = compiled.as_text()
+            rec["collectives"] = collective_bytes(hlo,
+                                                  body_multiplier=trips)
+            # trip-aware op count from the jaxpr (scan lengths respected);
+            # global logical FLOPs across the whole mesh.
+            from repro.core import estimator
+            if shape.kind == "train":
+                oc = estimator.count_ops(fn, p, o, b)
+            elif shape.kind == "prefill":
+                oc = estimator.count_ops(fn, p, b)
+            else:
+                oc = estimator.count_ops(fn, p, c, token, pos)
+            rec["cost"]["jaxpr_flops_global"] = float(
+                2 * oc.macs + oc.adds + oc.muls)
+            rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"[:2000]
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+
+    if rec["status"] == "ok":
+        # roofline terms (seconds per step per chip).
+        #  * compute: trip-aware jaxpr FLOPs / chips (HLO cost_analysis
+        #    counts while bodies once — see collective_bytes docstring);
+        #  * memory: HLO bytes_accessed scaled by the measured compute
+        #    undercount factor (body bytes dominate exactly when body
+        #    flops dominate — raw value also recorded);
+        #  * collectives: HLO per-op operand bytes, while-body ops
+        #    weighted by the layer trip count.
+        f_hlo = rec["cost"]["flops"]
+        f_true = rec["cost"]["jaxpr_flops_global"] / rec["chips"]
+        undercount = max(1.0, f_true / max(f_hlo, 1.0))
+        cb = rec["collectives"]["total_bytes"]
+        # per-device sharded sizes for the analytic memory model
+        p_chip = _sharded_bytes(p, cs.params)
+        o_chip = _sharded_bytes(o, cs.opt_state) if shape.kind == "train" \
+            else 0
+        cache_chip = _sharded_bytes(c, cs.cache) if shape.kind == "decode" \
+            else 0
+        mm = model_memory_bytes(cfg, shape, rec["chips"], p_chip=p_chip,
+                                o_chip=o_chip, cache_chip=cache_chip,
+                                trips=trips)
+        rec["memory"]["params_bytes_per_chip"] = p_chip
+        rec["memory"]["opt_bytes_per_chip"] = o_chip
+        rec["memory"]["cache_bytes_per_chip"] = cache_chip
+        rec["roofline"] = {
+            "compute_s": f_true / PEAK_FLOPS,
+            "memory_s": mm / HBM_BW,
+            "memory_s_hlo_upper": (rec["cost"]["bytes_accessed"]
+                                   * undercount) / HBM_BW,
+            "collective_s": cb / ICI_BW,
+            "hlo_undercount_factor": undercount,
+        }
+        dom = max(("compute_s", "memory_s", "collective_s"),
+                  key=lambda k: rec["roofline"][k])
+        rec["roofline"]["dominant"] = dom
+    _write(out_dir, rec)
+    return rec
+
+
+def _write(out_dir: pathlib.Path, rec: dict) -> None:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    (out_dir / name).write_text(json.dumps(rec, indent=1))
+    status = rec["status"]
+    extra = ""
+    if status == "ok":
+        peak = rec["memory"]["peak_per_device_bytes"] / 2**30
+        extra = (f" peak={peak:.2f}GiB/dev lower={rec['lower_s']}s "
+                 f"compile={rec['compile_s']}s dom={rec['roofline']['dominant']}")
+    elif status == "error":
+        extra = " " + rec["error"].splitlines()[0][:140]
+    print(f"[dryrun] {rec['arch']} {rec['shape']} {rec['mesh']}: "
+          f"{status}{extra}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+    out = pathlib.Path(args.out)
+
+    cells = []
+    if args.all:
+        for arch in configs.ARCH_IDS:
+            for sh in LM_SHAPES:
+                for mp in ((False, True) if args.both_meshes else
+                           (args.multi_pod,)):
+                    cells.append((arch, sh.name, mp))
+    else:
+        assert args.arch and args.shape
+        for mp in ((False, True) if args.both_meshes else (args.multi_pod,)):
+            cells.append((args.arch, args.shape, mp))
+
+    for arch, shp, mp in cells:
+        mesh_name = "pod2x16x16" if mp else "pod16x16"
+        path = out / f"{arch}__{shp}__{mesh_name}.json"
+        if args.skip_existing and path.exists():
+            prev = json.loads(path.read_text())
+            if prev.get("status") in ("ok", "skipped"):
+                print(f"[dryrun] skip existing {path.name}", flush=True)
+                continue
+        run_cell(arch, shp, multi_pod=mp, out_dir=out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,288 @@
+"""Step functions (train / prefill / decode) + ShapeDtypeStruct input specs.
+
+These are the units the multi-pod dry-run lowers and compiles for every
+(architecture x input-shape x mesh) cell, and the units the trainer /
+server jit at runtime.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models.transformer import DecoderLM, build_model
+from repro.optim import make_optimizer
+from repro.parallel import sharding
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+
+def token_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean next-token cross entropy; stable f32 logsumexp, computed chunked
+    over the sequence so the f32 logit upcast never materializes whole."""
+    v = logits.shape[-1]
+
+    def chunk_loss(lg, lb):
+        lg32 = lg.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg32, axis=-1)
+        gold = jnp.take_along_axis(lg32, lb[..., None], axis=-1)[..., 0]
+        return lse - gold
+
+    b, s, _ = logits.shape
+    n_chunks = max(1, s // 2048)
+    if s % n_chunks == 0 and n_chunks > 1:
+        lg = logits.reshape(b, n_chunks, s // n_chunks, v)
+        lb = labels.reshape(b, n_chunks, s // n_chunks)
+        losses = jax.lax.map(lambda ab: chunk_loss(ab[0], ab[1]),
+                             (jnp.moveaxis(lg, 1, 0), jnp.moveaxis(lb, 1, 0)))
+        return jnp.mean(losses)
+    return jnp.mean(chunk_loss(logits, labels))
+
+
+# ---------------------------------------------------------------------------
+# step factories
+# ---------------------------------------------------------------------------
+
+
+def make_loss_fn(model: DecoderLM):
+    cfg = model.cfg
+    from repro.models import layers as layers_mod
+
+    def loss_fn(params, batch):
+        kwargs = {}
+        if cfg.input_embed_stub:
+            kwargs["embeds"] = batch["embeds"]
+        else:
+            kwargs["tokens"] = batch["tokens"]
+        if cfg.needs_position_grid:
+            kwargs["positions"] = batch["positions"]
+        # fused head+xent: never materializes [tokens, vocab] f32 logits
+        # (custom VJP recomputes per-chunk in backward) — see layers.py.
+        x = model.hidden_states(params, **kwargs)
+        w = (params["embed"]["table"].T if cfg.tie_embeddings
+             else params["lm_head"]["w"])
+        n_chunks = max(1, x.shape[1] // 512)
+        return layers_mod.fused_xent_head(x, w, batch["labels"], n_chunks)
+
+    return loss_fn
+
+
+def make_train_step(cfg: ArchConfig, *, optimizer_name: str = "adamw",
+                    lr: float = 3e-4) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, loss).
+
+    ``cfg.grad_accum > 1`` splits the global batch into microbatches scanned
+    sequentially with f32 gradient accumulation — activation temporaries
+    shrink ~linearly (the llama4-maverick single-pod enabler, §Perf)."""
+    model = build_model(cfg)
+    opt = make_optimizer(optimizer_name, lr=lr,
+                         state_dtype=cfg.opt_state_dtype)
+    loss_fn = make_loss_fn(model)
+    accum = max(cfg.grad_accum, 1)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            assert batch["labels"].shape[0] % accum == 0, (
+                f"global batch {batch['labels'].shape[0]} not divisible by "
+                f"grad_accum={accum}")
+
+            def split(key, x):
+                if key == "positions":           # [3, B, S] -> [A, 3, B/A, S]
+                    return jnp.moveaxis(
+                        x.reshape(3, accum, x.shape[1] // accum, -1), 1, 0)
+                return x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+
+            micro = {k: split(k, v) for k, v in batch.items()}
+
+            def mb(carry, mbatch):
+                loss_acc, g_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mbatch)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (loss_acc + l, g_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (loss, grads), _ = jax.lax.scan(mb, (jnp.float32(0.0), g0),
+                                            micro)
+            loss = loss / accum
+            grads = jax.tree.map(lambda g, p: (g / accum).astype(p.dtype),
+                                 grads, params)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig) -> Callable:
+    """(params, batch) -> last-position logits (inference prefill)."""
+    model = build_model(cfg)
+
+    def prefill_step(params, batch):
+        kwargs = {}
+        if cfg.input_embed_stub:
+            kwargs["embeds"] = batch["embeds"]
+        else:
+            kwargs["tokens"] = batch["tokens"]
+        if cfg.needs_position_grid:
+            kwargs["positions"] = batch["positions"]
+        logits = model.apply(params, **kwargs)
+        return logits[:, -1]
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig) -> Callable:
+    """(params, cache, token, pos) -> (logits, cache): one decode step."""
+    model = build_model(cfg)
+
+    def serve_step(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct input specs (no allocation — dry-run stand-ins)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict[str, Any]:
+    """Batch stand-ins for a train/prefill step of ``shape``."""
+    b, s = shape.global_batch, shape.seq_len
+    batch: dict[str, Any] = {"labels": _sds((b, s), jnp.int32)}
+    if cfg.input_embed_stub:
+        # modality frontend stub: precomputed frame/patch embeddings
+        batch["embeds"] = _sds((b, s, cfg.d_model), cfg.dtype)
+    else:
+        batch["tokens"] = _sds((b, s), jnp.int32)
+    if cfg.needs_position_grid:
+        batch["positions"] = _sds((3, b, s), jnp.int32)
+    return batch
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeSpec):
+    """(token, pos) stand-ins for one serve_step with a ``seq_len`` cache."""
+    b = shape.global_batch
+    token = _sds((b,), jnp.int32)
+    pos = _sds((), jnp.int32)
+    return token, pos
+
+
+def abstract_params(cfg: ArchConfig):
+    model = build_model(cfg)
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def abstract_cache(cfg: ArchConfig, shape: ShapeSpec):
+    model = build_model(cfg)
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+
+
+def abstract_opt_state(cfg: ArchConfig, params_shapes,
+                       optimizer_name: str = "adamw"):
+    opt = make_optimizer(optimizer_name, lr=1e-3,
+                         state_dtype=cfg.opt_state_dtype)
+    return jax.eval_shape(opt.init, params_shapes)
+
+
+# ---------------------------------------------------------------------------
+# sharding assembly for a dry-run / launch cell
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CellShardings:
+    rules: sharding.AxisRules
+    params: Any
+    opt_state: Any | None
+    batch: Any | None
+    cache: Any | None
+    token: Any | None = None
+
+
+def batch_specs(cfg: ArchConfig, rules: sharding.AxisRules):
+    from jax.sharding import PartitionSpec as P
+    bspec = rules.rules.get("batch")
+    specs = {"labels": P(bspec, None)}
+    if cfg.input_embed_stub:
+        specs["embeds"] = P(bspec, None, None)
+    else:
+        specs["tokens"] = P(bspec, None)
+    if cfg.needs_position_grid:
+        specs["positions"] = P(None, bspec, None)
+    return specs
+
+
+def make_rules(mesh, cfg: ArchConfig, shape: ShapeSpec) -> sharding.AxisRules:
+    multi = "pod" in mesh.axis_names
+    if shape.name == "long_500k":
+        return sharding.long_context_rules(mesh, multi_pod=multi)
+    maker = (sharding.multi_pod_rules if multi
+             else sharding.single_pod_rules)
+    return maker(mesh, fsdp=cfg.fsdp)
+
+
+def cell_shardings(mesh, cfg: ArchConfig, shape: ShapeSpec,
+                   *, optimizer_name: str = "adamw") -> CellShardings:
+    from jax.sharding import NamedSharding
+
+    rules = make_rules(mesh, cfg, shape)
+    p_shapes = abstract_params(cfg)
+    p_specs = sharding.param_specs(p_shapes, rules)
+    ns = lambda tree: jax.tree.map(
+        lambda sp: NamedSharding(mesh, sp), tree,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    if shape.kind == "train":
+        o_shapes = abstract_opt_state(cfg, p_shapes, optimizer_name)
+        # m/v mirror the param tree; scalar step stays replicated
+        o_specs = jax.tree.map(
+            lambda _: None, o_shapes)
+        o_specs = _opt_specs_like(o_shapes, p_specs)
+        return CellShardings(rules=rules, params=ns(p_specs),
+                             opt_state=ns(o_specs),
+                             batch=ns(batch_specs(cfg, rules)), cache=None)
+    if shape.kind == "prefill":
+        return CellShardings(rules=rules, params=ns(p_specs), opt_state=None,
+                             batch=ns(batch_specs(cfg, rules)), cache=None)
+    # decode
+    from jax.sharding import PartitionSpec as P
+    c_shapes = abstract_cache(cfg, shape)
+    c_specs = sharding.cache_specs(c_shapes, rules)
+    bspec = rules.rules.get("batch")
+    return CellShardings(rules=rules, params=ns(p_specs), opt_state=None,
+                         batch=None, cache=ns(c_specs),
+                         token=NamedSharding(mesh, P(bspec)))
+
+
+def _opt_specs_like(o_shapes, p_specs):
+    """Give optimizer moment trees the same specs as their params."""
+    from jax.sharding import PartitionSpec as P
+    out = {}
+    for key, sub in o_shapes.items():
+        if key == "step":
+            out[key] = P()
+        else:
+            # sub mirrors the param tree (possibly with int8 {q,scale} leaves
+            # below each param position — those get replicated specs).
+            out[key] = jax.tree.map(
+                lambda spec, shp: spec if isinstance(
+                    shp, jax.ShapeDtypeStruct) and len(spec) <= len(shp.shape)
+                else P(),
+                p_specs, sub,
+                is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    return out

@@ -1,0 +1,7 @@
+from repro.models.transformer import (
+    DecoderLM,
+    build_model,
+    init_params,
+)
+
+__all__ = ["DecoderLM", "build_model", "init_params"]

@@ -1,0 +1,255 @@
+"""Shared neural-net layers: norms, RoPE variants, MLPs, embeddings.
+
+Pure-function style: ``init_*`` builds a param dict, ``apply`` fns are
+stateless. Norm statistics accumulate in float32 regardless of the compute
+dtype; matmuls run in the config compute dtype (bf16 on TPU).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[0] if len(shape) > 1 else 1
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+import functools as _ft
+
+
+@_ft.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _rms_norm_core(x, scale, eps):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _rms_fwd(x, scale, eps):
+    return _rms_norm_core(x, scale, eps), (x, scale)
+
+
+def _rms_bwd(eps, res, g):
+    # Analytic VJP saving only the bf16 input — the default AD residuals are
+    # two f32 [B,S,D] copies per norm (~1 GiB each at llama3 train_4k scale).
+    x, scale = res
+    x32 = x.astype(jnp.float32)
+    g32 = g.astype(jnp.float32)
+    s32 = scale.astype(jnp.float32)
+    n = x.shape[-1]
+    r = jax.lax.rsqrt(jnp.mean(jnp.square(x32), axis=-1, keepdims=True) + eps)
+    gs = g32 * s32
+    dot = jnp.sum(gs * x32, axis=-1, keepdims=True)
+    dx = r * gs - (r ** 3) * x32 * (dot / n)
+    dscale = jnp.sum((g32 * x32 * r).reshape(-1, n), axis=0)
+    return dx.astype(x.dtype), dscale.astype(scale.dtype)
+
+
+_rms_norm_core.defvjp(_rms_fwd, _rms_bwd)
+
+
+def rms_norm(x: jnp.ndarray, params: dict, eps: float = 1e-5) -> jnp.ndarray:
+    return _rms_norm_core(x, params["scale"], eps)
+
+
+def head_rms_norm(x: jnp.ndarray, scale: jnp.ndarray,
+                  eps: float = 1e-5) -> jnp.ndarray:
+    """Per-head q/k norm (qwen3): normalizes the head_dim axis."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings — full / half (chatglm 2d) / M-RoPE (qwen2-vl)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float, rotary_dim: int | None = None):
+    rd = rotary_dim or head_dim
+    inv = 1.0 / (theta ** (jnp.arange(0, rd, 2, dtype=jnp.float32) / rd))
+    return inv  # [rd/2]
+
+
+def _rotate(x, cos, sin):
+    """Rotate pairs (even, odd interleave by halves): x [..., rd]."""
+    rd = cos.shape[-1] * 2
+    x1, x2 = x[..., : rd // 2], x[..., rd // 2: rd]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           axis=-1)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, *, theta: float,
+               style: str = "full",
+               sections: tuple[int, ...] = ()) -> jnp.ndarray:
+    """Apply rotary embeddings.
+
+    x: [B, S, H, D]. positions: [B, S] (full/half) or [3, B, S] (mrope:
+    temporal/height/width position grids — the VLM frontend stub supplies
+    text-style positions broadcast to all three).
+    """
+    if style == "none":
+        return x
+    d = x.shape[-1]
+    if style == "half":
+        # chatglm: rotary over the first half of head_dim, rest passthrough.
+        rd = d // 2
+        inv = rope_freqs(d, theta, rd)
+        ang = positions[..., None].astype(jnp.float32) * inv  # [B,S,rd/2]
+        cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+        sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+        rot = _rotate(x[..., :rd], cos, sin)
+        return jnp.concatenate([rot, x[..., rd:]], axis=-1)
+    if style == "mrope":
+        assert positions.ndim == 3, "mrope needs [3, B, S] positions"
+        import numpy as np
+        inv = rope_freqs(d, theta)                     # [d/2]
+        splits = np.cumsum(np.asarray(sections))[:-1].tolist()
+        freq_chunks = jnp.split(inv, splits)
+        ang_parts = []
+        for i, chunk in enumerate(freq_chunks):
+            ang_parts.append(
+                positions[i][..., None].astype(jnp.float32) * chunk)
+        ang = jnp.concatenate(ang_parts, axis=-1)      # [B,S,d/2]
+        cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+        sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+        return _rotate(x, cos, sin)
+    # full
+    inv = rope_freqs(d, theta)
+    ang = positions[..., None].astype(jnp.float32) * inv
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    return _rotate(x, cos, sin)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": _dense_init(k1, (d_model, d_ff), dtype),
+        "w_up": _dense_init(k2, (d_model, d_ff), dtype),
+        "w_down": _dense_init(k3, (d_ff, d_model), dtype),
+    }
+
+
+def mlp(x: jnp.ndarray, params: dict) -> jnp.ndarray:
+    from repro.parallel import sharding
+    g = x @ params["w_gate"]
+    u = x @ params["w_up"]
+    h = jax.nn.silu(g) * u
+    # rank-agnostic: [B,S,F] in blocks, [T,F] in the MoE shared expert
+    h = sharding.constrain(
+        h, ("batch",) + (None,) * (h.ndim - 2) + ("mlp",))
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+
+def init_embed(key, vocab: int, d_model: int, dtype) -> dict:
+    return {"table": _dense_init(key, (vocab, d_model), dtype, scale=0.02)}
+
+
+def embed(tokens: jnp.ndarray, params: dict) -> jnp.ndarray:
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def init_lm_head(key, d_model: int, vocab: int, dtype) -> dict:
+    return {"w": _dense_init(key, (d_model, vocab), dtype)}
+
+
+def lm_head(x: jnp.ndarray, params: dict) -> jnp.ndarray:
+    from repro.parallel import sharding
+    logits = x @ params["w"]
+    return sharding.constrain(logits, ("batch", None, "vocab"))
+
+
+# ---------------------------------------------------------------------------
+# fused LM-head + cross-entropy (custom VJP)
+# ---------------------------------------------------------------------------
+# The f32 upcast of [tokens, vocab] logits is the single largest training
+# buffer (e.g. llama3-8b train_4k: ~2.1 GiB per chunk per device, several
+# live at once through the VJP). This fusion never materializes logits across
+# the whole sequence: forward computes (lse, gold) per seq chunk saving only
+# lse; backward recomputes each chunk's logits and feeds dx / dw directly.
+
+import functools as _functools
+
+
+def _xent_chunks(x, w, labels, n_chunks):
+    b, s, d = x.shape
+    sc = s // n_chunks
+    xr = jnp.moveaxis(x.reshape(b, n_chunks, sc, d), 1, 0)
+    lr = jnp.moveaxis(labels.reshape(b, n_chunks, sc), 1, 0)
+    return xr, lr, sc
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_xent_head(x, w, labels, n_chunks: int = 8):
+    """mean_t [ logsumexp(x_t W) - (x_t W)[label_t] ];  x:[B,S,D] w:[D,V]."""
+    loss, _ = _fused_xent_fwd(x, w, labels, n_chunks)
+    return loss
+
+
+def _fused_xent_fwd(x, w, labels, n_chunks):
+    b, s, d = x.shape
+    xr, lr, sc = _xent_chunks(x, w, labels, n_chunks)
+
+    def body(acc, inp):
+        xc, lc = inp
+        logits = jnp.einsum("bsd,dv->bsv", xc, w,
+                            preferred_element_type=jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)              # [B,sc]
+        gold = jnp.take_along_axis(logits, lc[..., None], -1)[..., 0]
+        return acc + jnp.sum(lse - gold), lse
+
+    total, lses = jax.lax.scan(body, jnp.float32(0.0), (xr, lr))
+    loss = total / (b * s)
+    return loss, (x, w, labels, lses)
+
+
+def _fused_xent_bwd(n_chunks, res, g):
+    x, w, labels, lses = res
+    b, s, d = x.shape
+    n_tok = b * s
+    xr, lr, sc = _xent_chunks(x, w, labels, n_chunks)
+
+    def body(dw_acc, inp):
+        xc, lc, lse = inp
+        logits = jnp.einsum("bsd,dv->bsv", xc, w,
+                            preferred_element_type=jnp.float32)
+        p = jnp.exp(logits - lse[..., None])
+        onehot = jax.nn.one_hot(lc, w.shape[1], dtype=jnp.float32)
+        dlogits = (p - onehot) * (g / n_tok)
+        dxc = jnp.einsum("bsv,dv->bsd", dlogits.astype(x.dtype), w)
+        dw_acc = dw_acc + jnp.einsum("bsd,bsv->dv", xc.astype(jnp.float32),
+                                     dlogits)
+        return dw_acc, dxc
+
+    dw, dxs = jax.lax.scan(body, jnp.zeros(w.shape, jnp.float32), (xr, lr,
+                                                                   lses))
+    dx = jnp.moveaxis(dxs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    return dx, dw.astype(w.dtype), None
+
+
+fused_xent_head.defvjp(_fused_xent_fwd, _fused_xent_bwd)

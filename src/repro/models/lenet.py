@@ -1,0 +1,73 @@
+"""LeNet-5-type CNN — the paper's benchmark network (§4.1).
+
+~21.7k parameters (paper: 21,690; exact split unpublished — DESIGN.md §7),
+trained with full float32 precision, matching the paper's setup where both
+accelerators compute exactly (same converged accuracy).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.lenet5 import LeNetConfig
+
+
+def init_lenet(key, cfg: LeNetConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    k = jax.random.split(key, 5)
+    c1, c2 = cfg.conv_channels
+    ksz = cfg.kernel
+
+    def conv_w(key, cin, cout):
+        fan = cin * ksz * ksz
+        return (jax.random.normal(key, (ksz, ksz, cin, cout))
+                * (2.0 / fan) ** 0.5).astype(dt)
+
+    def fc_w(key, fin, fout):
+        return (jax.random.normal(key, (fin, fout))
+                * (2.0 / fin) ** 0.5).astype(dt)
+
+    # spatial sizes: 28 -conv5-> 24 -pool-> 12 -conv5-> 8 -pool-> 4
+    flat = c2 * 4 * 4
+    f1, f2 = cfg.fc_dims
+    return {
+        "conv1": {"w": conv_w(k[0], 1, c1), "b": jnp.zeros((c1,), dt)},
+        "conv2": {"w": conv_w(k[1], c1, c2), "b": jnp.zeros((c2,), dt)},
+        "fc1": {"w": fc_w(k[2], flat, f1), "b": jnp.zeros((f1,), dt)},
+        "fc2": {"w": fc_w(k[3], f1, f2), "b": jnp.zeros((f2,), dt)},
+        "fc3": {"w": fc_w(k[4], f2, cfg.n_classes),
+                "b": jnp.zeros((cfg.n_classes,), dt)},
+    }
+
+
+def _avg_pool2(x):
+    return jax.lax.reduce_window(x, 0.0, jax.lax.add, (1, 2, 2, 1),
+                                 (1, 2, 2, 1), "VALID") / 4.0
+
+
+def lenet_apply(params: dict, images: jnp.ndarray) -> jnp.ndarray:
+    """images: [B, 28, 28, 1] -> logits [B, 10]."""
+    x = jax.lax.conv_general_dilated(
+        images, params["conv1"]["w"], (1, 1), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + params["conv1"]["b"]
+    x = _avg_pool2(jnp.tanh(x))
+    x = jax.lax.conv_general_dilated(
+        x, params["conv2"]["w"], (1, 1), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + params["conv2"]["b"]
+    x = _avg_pool2(jnp.tanh(x))
+    x = x.reshape(x.shape[0], -1)
+    x = jnp.tanh(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    x = jnp.tanh(x @ params["fc2"]["w"] + params["fc2"]["b"])
+    return x @ params["fc3"]["w"] + params["fc3"]["b"]
+
+
+def lenet_loss(params: dict, images: jnp.ndarray,
+               labels: jnp.ndarray) -> jnp.ndarray:
+    logits = lenet_apply(params, images)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def n_params(params: dict) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params))

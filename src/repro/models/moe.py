@@ -1,0 +1,133 @@
+"""Mixture-of-Experts layer: top-k router + grouped, capacity-bounded
+dispatch (GShard-style groups).
+
+Dispatch design — the only formulation we found that GSPMD partitions with
+zero replication (see DESIGN.md §5 and EXPERIMENTS.md §Perf for the
+alternatives that failed):
+
+  * tokens are split into G groups aligned with the data-parallel axis;
+    every group dispatches *locally* to a per-group capacity buffer
+    ``[G, E, C, D]`` sharded (data, model, -, -) — expert FLOPs therefore
+    spread over the whole mesh (data x model), not just the expert axis;
+  * the slot->token index map is built with a tiny flat int32 scatter
+    (G*E*C ints, ~5 MB — replicating it is free) instead of scattering the
+    [T, D] activations themselves (which GSPMD replicates: 21 GiB/device on
+    llama4-maverick train_4k);
+  * activations then move with *batched gathers* (take_along_axis over the
+    group dim), which GSPMD partitions as parallel gathers / all-to-alls.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.parallel import sharding
+
+
+def init_moe(key, d_model: int, n_experts: int, d_ff: int, dtype,
+             *, shared_expert: bool = False, shared_d_ff: int = 0) -> dict:
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": layers._dense_init(ks[0], (d_model, n_experts), dtype,
+                                     scale=0.02),
+        "w_gate": layers._dense_init(ks[1], (n_experts, d_model, d_ff), dtype),
+        "w_up": layers._dense_init(ks[2], (n_experts, d_model, d_ff), dtype),
+        "w_down": layers._dense_init(ks[3], (n_experts, d_ff, d_model), dtype),
+    }
+    if shared_expert:
+        p["shared_expert"] = layers.init_mlp(ks[4], d_model,
+                                             shared_d_ff or d_ff, dtype)
+    return p
+
+
+def capacity(tokens_per_group: int, n_experts: int, top_k: int,
+             capacity_factor: float) -> int:
+    c = int(math.ceil(tokens_per_group * top_k / n_experts
+                      * capacity_factor))
+    return max(8, -(-c // 8) * 8)  # multiple of 8
+
+
+def _n_groups(cfg, t: int) -> int:
+    return math.gcd(getattr(cfg, "moe_groups", 32), t)
+
+
+def moe_block(x: jnp.ndarray, params: dict, cfg) -> jnp.ndarray:
+    """x: [B, S, D] -> [B, S, D]."""
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.top_k
+    e = cfg.n_experts
+    grp = _n_groups(cfg, t)
+    tl = t // grp                       # tokens per group
+    c = capacity(tl, e, k, cfg.capacity_factor)
+
+    xg = x.reshape(grp, tl, d)
+    xg = sharding.constrain(xg, ("batch", None, None))
+    logits = (xg @ params["router"]).astype(jnp.float32)    # [G,TL,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_idx = jax.lax.top_k(probs, k)              # [G,TL,k]
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # position of each assignment within its expert, per group
+    flat_e = gate_idx.reshape(grp, tl * k)                  # [G,TL*k]
+    oh = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)         # [G,TL*k,E]
+    pos = jnp.sum((jnp.cumsum(oh, axis=1) - 1) * oh, axis=-1)   # [G,TL*k]
+    keep = pos < c
+    pos_c = jnp.where(keep, pos, 0)
+
+    # slot -> token map: tiny flat int32 scatter (replication is free)
+    g_ids = jnp.arange(grp, dtype=jnp.int32)[:, None]
+    slot = (g_ids * (e * c) + flat_e * c + pos_c).reshape(-1)
+    slot = jnp.where(keep.reshape(-1), slot, grp * e * c)   # dump lane
+    token_ids = jnp.broadcast_to(
+        (jnp.arange(tl * k, dtype=jnp.int32) // k)[None], (grp, tl * k)
+    ).reshape(-1)
+    slot_token = jnp.zeros((grp * e * c + 1,), jnp.int32)
+    slot_valid = jnp.zeros((grp * e * c + 1,), jnp.bool_)
+    slot_token = slot_token.at[slot].set(token_ids, mode="drop")
+    slot_valid = slot_valid.at[slot].set(True, mode="drop")
+    slot_token = slot_token[:-1].reshape(grp, e * c)
+    slot_valid = slot_valid[:-1].reshape(grp, e * c)
+
+    # dispatch: batched gather over the group dim (local per data shard)
+    buf = jnp.take_along_axis(xg, slot_token[..., None], axis=1)
+    buf = jnp.where(slot_valid[..., None], buf, 0)
+    buf = buf.reshape(grp, e, c, d)
+    buf = sharding.constrain(buf, ("batch", "expert", None, None))
+
+    # expert FFN (SwiGLU), batched over (group, expert)
+    g_ = jnp.einsum("gecd,edf->gecf", buf, params["w_gate"])
+    u_ = jnp.einsum("gecd,edf->gecf", buf, params["w_up"])
+    h = jax.nn.silu(g_) * u_
+    h = sharding.constrain(h, ("batch", "expert", None, None))
+    out_buf = jnp.einsum("gecf,efd->gecd", h, params["w_down"])
+    out_buf = sharding.constrain(out_buf, ("batch", "expert", None, None))
+
+    # combine: per-group gather back by (expert, position), weight, sum k
+    comb_idx = (flat_e * c + pos_c)                         # [G,TL*k]
+    gathered = jnp.take_along_axis(out_buf.reshape(grp, e * c, d),
+                                   comb_idx[..., None], axis=1)
+    gathered = jnp.where(keep[..., None], gathered, 0)      # [G,TL*k,D]
+    gathered = gathered.reshape(grp, tl, k, d)
+    out = jnp.sum(gathered * gate_w[..., None].astype(x.dtype), axis=2)
+    out = sharding.constrain(out, ("batch", None, None))
+
+    if "shared_expert" in params:
+        out = out + layers.mlp(xg, params["shared_expert"])
+    return out.reshape(b, s, d)
+
+
+def aux_load_balance_loss(logits: jnp.ndarray, gate_idx: jnp.ndarray,
+                          n_experts: int) -> jnp.ndarray:
+    """Switch-style load-balance auxiliary loss (optional, train-time)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    probs = probs.reshape(-1, n_experts)
+    me = probs.mean(axis=0)
+    ce = jnp.bincount(gate_idx.reshape(-1), length=n_experts
+                      ).astype(jnp.float32)
+    ce = ce / jnp.maximum(ce.sum(), 1.0)
+    return n_experts * jnp.sum(me * ce)

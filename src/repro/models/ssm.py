@@ -1,0 +1,470 @@
+"""Recurrent sequence blocks: mLSTM + sLSTM (xLSTM) and Mamba2 (SSD).
+
+All three expose two computation paths:
+  * ``*_seq``   — process a whole [B, S, D] sequence (training / prefill),
+                  implemented as ``lax.scan`` over time (the baseline;
+                  chunked-parallel SSD is a §Perf hillclimb variant);
+  * ``*_step``  — one decode step with an O(1) recurrent state (this is what
+                  makes the 500k-token long-context decode shape tractable —
+                  state size is independent of context length).
+
+Gating uses the xLSTM stabilized exponential-gate formulation (log-space
+stabilizer m) so long sequences don't overflow in bf16.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix memory) — xLSTM [arXiv:2405.04517]
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, d_model: int, n_heads: int, dtype) -> dict:
+    ks = jax.random.split(key, 8)
+    d = d_model
+    return {
+        "norm": layers.init_rmsnorm(d, dtype),
+        "w_q": layers._dense_init(ks[0], (d, d), dtype),
+        "w_k": layers._dense_init(ks[1], (d, d), dtype),
+        "w_v": layers._dense_init(ks[2], (d, d), dtype),
+        "w_i": layers._dense_init(ks[3], (d, n_heads), dtype, scale=0.02),
+        "w_f": layers._dense_init(ks[4], (d, n_heads), dtype, scale=0.02),
+        "w_o": layers._dense_init(ks[5], (d, d), dtype),
+        "w_proj_up": layers._dense_init(ks[6], (d, 2 * d), dtype),
+        "w_proj_down": layers._dense_init(ks[7], (2 * d, d), dtype),
+        "f_bias": jnp.full((n_heads,), 3.0, dtype),
+    }
+
+
+def mlstm_state(batch: int, n_heads: int, dk: int, dv: int):
+    return {
+        "C": jnp.zeros((batch, n_heads, dk, dv), jnp.float32),
+        "n": jnp.zeros((batch, n_heads, dk), jnp.float32),
+        "m": jnp.full((batch, n_heads), -1e30, jnp.float32),
+    }
+
+
+def _mlstm_cell(state, q, k, v, i_pre, f_pre):
+    """One stabilized mLSTM step. q/k/v: [B,H,dk|dv] f32; gates [B,H]."""
+    c_prev, n_prev, m_prev = state["C"], state["n"], state["m"]
+    log_f = -jax.nn.softplus(-f_pre)         # log sigmoid(f)
+    m_new = jnp.maximum(log_f + m_prev, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(log_f + m_prev - m_new)
+    c_new = (f_g[..., None, None] * c_prev
+             + i_g[..., None, None] * (k[..., :, None] * v[..., None, :]))
+    n_new = f_g[..., None] * n_prev + i_g[..., None] * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q)),
+                        jnp.exp(-m_new))
+    h = jnp.einsum("bhkv,bhk->bhv", c_new, q) / denom[..., None]
+    return {"C": c_new, "n": n_new, "m": m_new}, h
+
+
+def _mlstm_gates_qkv(x, params, n_heads):
+    b, s, d = x.shape
+    dk = d // n_heads
+    q = (x @ params["w_q"]).reshape(b, s, n_heads, dk) * (dk ** -0.5)
+    k = (x @ params["w_k"]).reshape(b, s, n_heads, dk)
+    v = (x @ params["w_v"]).reshape(b, s, n_heads, dk)
+    i_pre = (x @ params["w_i"]).astype(jnp.float32)
+    f_pre = (x @ params["w_f"]).astype(jnp.float32) + params["f_bias"].astype(
+        jnp.float32)
+    return q, k, v, i_pre, f_pre
+
+
+def mlstm_seq(x: jnp.ndarray, params: dict, n_heads: int) -> jnp.ndarray:
+    """[B, S, D] -> [B, S, D], scan over time."""
+    b, s, d = x.shape
+    h = layers.rms_norm(x, params["norm"])
+    q, k, v, i_pre, f_pre = _mlstm_gates_qkv(h, params, n_heads)
+    state = mlstm_state(b, n_heads, d // n_heads, d // n_heads)
+
+    def body(st, inp):
+        qt, kt, vt, it, ft = inp
+        st, out = _mlstm_cell(st, qt.astype(jnp.float32),
+                              kt.astype(jnp.float32),
+                              vt.astype(jnp.float32), it, ft)
+        return st, out
+
+    xs = (jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0),
+          jnp.moveaxis(v, 1, 0), jnp.moveaxis(i_pre, 1, 0),
+          jnp.moveaxis(f_pre, 1, 0))
+    _, outs = jax.lax.scan(body, state, xs)
+    hidden = jnp.moveaxis(outs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    o_gate = jax.nn.sigmoid(h @ params["w_o"])
+    hidden = hidden * o_gate
+    up = hidden @ params["w_proj_up"]
+    return x + jax.nn.gelu(up) @ params["w_proj_down"]
+
+
+def mlstm_step(x: jnp.ndarray, params: dict, state: dict,
+               n_heads: int) -> tuple[jnp.ndarray, dict]:
+    """One decode step. x: [B, 1, D]."""
+    b, _, d = x.shape
+    h = layers.rms_norm(x, params["norm"])
+    q, k, v, i_pre, f_pre = _mlstm_gates_qkv(h, params, n_heads)
+    state, out = _mlstm_cell(state, q[:, 0].astype(jnp.float32),
+                             k[:, 0].astype(jnp.float32),
+                             v[:, 0].astype(jnp.float32),
+                             i_pre[:, 0], f_pre[:, 0])
+    hidden = out.reshape(b, 1, d).astype(x.dtype)
+    o_gate = jax.nn.sigmoid(h @ params["w_o"])
+    hidden = hidden * o_gate
+    up = hidden @ params["w_proj_up"]
+    return x + jax.nn.gelu(up) @ params["w_proj_down"], state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory) — xLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, d_model: int, n_heads: int, dtype) -> dict:
+    ks = jax.random.split(key, 8)
+    d = d_model
+    return {
+        "norm": layers.init_rmsnorm(d, dtype),
+        "w_z": layers._dense_init(ks[0], (d, d), dtype),
+        "w_i": layers._dense_init(ks[1], (d, n_heads), dtype, scale=0.02),
+        "w_f": layers._dense_init(ks[2], (d, n_heads), dtype, scale=0.02),
+        "w_o": layers._dense_init(ks[3], (d, d), dtype),
+        "r_z": layers._dense_init(ks[4], (d, d), dtype, scale=0.02),
+        "w_proj_up": layers._dense_init(ks[5], (d, 2 * d), dtype),
+        "w_proj_down": layers._dense_init(ks[6], (2 * d, d), dtype),
+        "f_bias": jnp.full((n_heads,), 3.0, dtype),
+    }
+
+
+def slstm_state(batch: int, d_model: int, n_heads: int):
+    return {
+        "c": jnp.zeros((batch, d_model), jnp.float32),
+        "n": jnp.zeros((batch, d_model), jnp.float32),
+        "m": jnp.full((batch, n_heads), -1e30, jnp.float32),
+        "h": jnp.zeros((batch, d_model), jnp.float32),
+    }
+
+
+def _slstm_cell(state, z_pre, i_pre, f_pre, n_heads):
+    b, d = z_pre.shape
+    dh = d // n_heads
+    log_f = -jax.nn.softplus(-f_pre)
+    m_new = jnp.maximum(log_f + state["m"], i_pre)
+    i_g = jnp.repeat(jnp.exp(i_pre - m_new), dh, axis=-1)
+    f_g = jnp.repeat(jnp.exp(log_f + state["m"] - m_new), dh, axis=-1)
+    z = jnp.tanh(z_pre)
+    c_new = f_g * state["c"] + i_g * z
+    n_new = f_g * state["n"] + i_g
+    h_new = c_new / jnp.maximum(n_new, 1e-6)
+    return {"c": c_new, "n": n_new, "m": m_new, "h": h_new}, h_new
+
+
+def slstm_seq(x: jnp.ndarray, params: dict, n_heads: int) -> jnp.ndarray:
+    b, s, d = x.shape
+    xn = layers.rms_norm(x, params["norm"])
+    z_pre_all = xn @ params["w_z"]
+    i_pre_all = (xn @ params["w_i"]).astype(jnp.float32)
+    f_pre_all = (xn @ params["w_f"]).astype(jnp.float32) + params[
+        "f_bias"].astype(jnp.float32)
+    state = slstm_state(b, d, n_heads)
+
+    def body(st, inp):
+        zt, it, ft = inp
+        # recurrent connection from previous hidden state
+        z_rec = (st["h"].astype(x.dtype) @ params["r_z"]).astype(jnp.float32)
+        st, h = _slstm_cell(st, zt.astype(jnp.float32) + z_rec, it, ft,
+                            n_heads)
+        return st, h
+
+    xs = (jnp.moveaxis(z_pre_all, 1, 0), jnp.moveaxis(i_pre_all, 1, 0),
+          jnp.moveaxis(f_pre_all, 1, 0))
+    _, outs = jax.lax.scan(body, state, xs)
+    hidden = jnp.moveaxis(outs, 0, 1).astype(x.dtype)
+    o_gate = jax.nn.sigmoid(xn @ params["w_o"])
+    hidden = hidden * o_gate
+    up = hidden @ params["w_proj_up"]
+    return x + jax.nn.gelu(up) @ params["w_proj_down"]
+
+
+def slstm_step(x: jnp.ndarray, params: dict, state: dict,
+               n_heads: int) -> tuple[jnp.ndarray, dict]:
+    b, _, d = x.shape
+    xn = layers.rms_norm(x, params["norm"])
+    z_rec = (state["h"].astype(x.dtype) @ params["r_z"]).astype(jnp.float32)
+    z_pre = (xn[:, 0] @ params["w_z"]).astype(jnp.float32) + z_rec
+    i_pre = (xn[:, 0] @ params["w_i"]).astype(jnp.float32)
+    f_pre = (xn[:, 0] @ params["w_f"]).astype(jnp.float32) + params[
+        "f_bias"].astype(jnp.float32)
+    state, h = _slstm_cell(state, z_pre, i_pre, f_pre, n_heads)
+    hidden = h[:, None, :].astype(x.dtype)
+    o_gate = jax.nn.sigmoid(xn @ params["w_o"])
+    hidden = hidden * o_gate
+    up = hidden @ params["w_proj_up"]
+    return x + jax.nn.gelu(up) @ params["w_proj_down"], state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD) — zamba2's sequence mixer [arXiv:2411.15242]
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2(key, d_model: int, ssm_state: int, headdim: int,
+                conv_width: int, dtype) -> dict:
+    ks = jax.random.split(key, 7)
+    d_in = 2 * d_model
+    nh = d_in // headdim
+    return {
+        "norm": layers.init_rmsnorm(d_model, dtype),
+        "w_in": layers._dense_init(ks[0], (d_model, 2 * d_in), dtype),
+        "conv": layers._dense_init(ks[1], (conv_width, 1, d_in), dtype),
+        "w_b": layers._dense_init(ks[2], (d_in, ssm_state), dtype,
+                                  scale=0.02),
+        "w_c": layers._dense_init(ks[3], (d_in, ssm_state), dtype,
+                                  scale=0.02),
+        "w_dt": layers._dense_init(ks[4], (d_model, nh), dtype, scale=0.02),
+        "dt_bias": jnp.zeros((nh,), dtype),
+        "a_log": jnp.zeros((nh,), dtype),
+        "d_skip": jnp.ones((nh,), dtype),
+        "w_out": layers._dense_init(ks[5], (d_in, d_model), dtype),
+    }
+
+
+def mamba2_state(batch: int, n_heads: int, headdim: int, ssm_state: int,
+                 conv_width: int, d_in: int):
+    return {
+        "ssm": jnp.zeros((batch, n_heads, headdim, ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, conv_width - 1, d_in), jnp.float32),
+    }
+
+
+def _mamba_proj(x, params, headdim):
+    b, s, d = x.shape
+    d_in = 2 * d
+    xz = x @ params["w_in"]
+    xi, z = jnp.split(xz, 2, axis=-1)          # [B,S,d_in] each
+    return xi, z
+
+
+def _causal_conv_seq(xi, conv_w):
+    """Depthwise causal conv over time. xi: [B,S,C], conv_w: [W,1,C]."""
+    w = conv_w.shape[0]
+    pad = jnp.pad(xi, ((0, 0), (w - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xi)
+    for i in range(w):
+        out = out + pad[:, i: i + xi.shape[1]] * conv_w[i, 0]
+    return jax.nn.silu(out)
+
+
+def mamba2_seq(x: jnp.ndarray, params: dict, *, ssm_state: int,
+               headdim: int) -> jnp.ndarray:
+    b, s, d = x.shape
+    xn = layers.rms_norm(x, params["norm"])
+    xi, z = _mamba_proj(xn, params, headdim)
+    xi = _causal_conv_seq(xi, params["conv"])
+    d_in = xi.shape[-1]
+    nh = d_in // headdim
+    bmat = (xi @ params["w_b"]).astype(jnp.float32)     # [B,S,N]
+    cmat = (xi @ params["w_c"]).astype(jnp.float32)     # [B,S,N]
+    dt = jax.nn.softplus((xn @ params["w_dt"]).astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # [B,S,H]
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))   # [H]
+    xh = xi.reshape(b, s, nh, headdim).astype(jnp.float32)
+
+    def body(st, inp):
+        xt, bt, ct, dtt = inp                 # [B,H,P],[B,N],[B,N],[B,H]
+        decay = jnp.exp(a * dtt)              # [B,H]
+        upd = (dtt[..., None] * xt)[..., None] * bt[:, None, None, :]
+        st_new = decay[..., None, None] * st + upd
+        yt = jnp.einsum("bhpn,bn->bhp", st_new, ct)
+        return st_new, yt
+
+    st0 = jnp.zeros((b, nh, headdim, ssm_state), jnp.float32)
+    xs = (jnp.moveaxis(xh, 1, 0), jnp.moveaxis(bmat, 1, 0),
+          jnp.moveaxis(cmat, 1, 0), jnp.moveaxis(dt, 1, 0))
+    _, ys = jax.lax.scan(body, st0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                 # [B,S,H,P]
+    y = y + params["d_skip"].astype(jnp.float32)[:, None] * xh
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return x + y @ params["w_out"]
+
+
+def mamba2_step(x: jnp.ndarray, params: dict, state: dict, *,
+                ssm_state: int, headdim: int) -> tuple[jnp.ndarray, dict]:
+    """One decode step; O(1) state (the long_500k enabler)."""
+    b, _, d = x.shape
+    xn = layers.rms_norm(x, params["norm"])
+    xi, z = _mamba_proj(xn, params, headdim)
+    # causal conv via the rolling buffer
+    w = params["conv"].shape[0]
+    hist = jnp.concatenate([state["conv"],
+                            xi[:, 0:1].astype(jnp.float32)], axis=1)
+    conv_out = jnp.einsum("bwc,wc->bc", hist,
+                          params["conv"][:, 0].astype(jnp.float32))
+    xi1 = jax.nn.silu(conv_out)                            # [B,d_in]
+    new_conv = hist[:, 1:]
+    d_in = xi1.shape[-1]
+    nh = d_in // headdim
+    bvec = (xi1 @ params["w_b"].astype(jnp.float32))
+    cvec = (xi1 @ params["w_c"].astype(jnp.float32))
+    dt = jax.nn.softplus((xn[:, 0] @ params["w_dt"]).astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    xh = xi1.reshape(b, nh, headdim)
+    decay = jnp.exp(a * dt)
+    upd = (dt[..., None] * xh)[..., None] * bvec[:, None, None, :]
+    ssm_new = decay[..., None, None] * state["ssm"] + upd
+    y = jnp.einsum("bhpn,bn->bhp", ssm_new, cvec)
+    y = y + params["d_skip"].astype(jnp.float32)[:, None] * xh
+    y = y.reshape(b, 1, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return x + y @ params["w_out"], {"ssm": ssm_new, "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# chunked-parallel forms (training/prefill): O(S/L) sequential steps,
+# intra-chunk work as dense einsums. These are what make the 4k-train shapes
+# fit in HBM — a per-timestep scan would store the matrix state per step for
+# the backward pass (~TBs at batch 256). Validated against the sequential
+# forms in tests/test_ssm.py.
+# ---------------------------------------------------------------------------
+
+
+def mlstm_seq_chunked(x: jnp.ndarray, params: dict, n_heads: int,
+                      chunk: int = 256) -> jnp.ndarray:
+    """Chunkwise stabilized mLSTM (xLSTM appendix formulation).
+
+    Within a chunk (length L), with F_t = cumsum(log f) and
+    M_t = max(m_prev - F_0?, cummax(i - F)):
+      m_t      = F_t + M_t
+      y_t      = e^{m_prev - M_t} q_t^T Chat_prev
+                 + sum_{tau<=t} e^{i_tau - F_tau - M_t} (q_t.k_tau) v_tau
+      Chat_new = e^{m_prev - M_L} Chat_prev + sum_tau e^{i-F-M_L} k v^T
+    All exponents are <= 0 — bf16-safe.
+    """
+    b, s, d = x.shape
+    h_in = layers.rms_norm(x, params["norm"])
+    q, k, v, i_pre, f_pre = _mlstm_gates_qkv(h_in, params, n_heads)
+    dk = d // n_heads
+    l = min(chunk, s)
+    assert s % l == 0
+    nc = s // l
+    # [B, nc, L, H, dk] -> [nc, B, H, L, dk]
+    def cshape(t):
+        return jnp.moveaxis(t.reshape(b, nc, l, n_heads, -1), 3, 2
+                            ).transpose(1, 0, 2, 3, 4)
+    qc, kc, vc = cshape(q.astype(jnp.float32)), cshape(
+        k.astype(jnp.float32)), cshape(v.astype(jnp.float32))
+    ic = i_pre.reshape(b, nc, l, n_heads).transpose(1, 0, 3, 2)  # [nc,B,H,L]
+    fc = f_pre.reshape(b, nc, l, n_heads).transpose(1, 0, 3, 2)
+
+    def body(carry, inp):
+        c_hat, n_hat, m_prev = carry
+        qt, kt, vt, it, ft = inp             # [B,H,L,dk] / [B,H,L]
+        log_f = -jax.nn.softplus(-ft)
+        f_cum = jnp.cumsum(log_f, axis=-1)    # F_t
+        g = it - f_cum                        # i_tau - F_tau
+        m_loc = jnp.maximum(jax.lax.cummax(g, axis=2), m_prev[..., None])
+        # intra-chunk decay matrix D[t,tau] = exp(g_tau - M_t), causal
+        dmat = jnp.exp(g[:, :, None, :] - m_loc[:, :, :, None])
+        causal = jnp.tril(jnp.ones((l, l), bool))
+        dmat = jnp.where(causal, dmat, 0.0)
+        scores = jnp.einsum("bhtd,bhsd->bhts", qt, kt) * dmat
+        y_intra = jnp.einsum("bhts,bhsd->bhtd", scores, vt)
+        inter_scale = jnp.exp(m_prev[..., None] - m_loc)          # [B,H,L]
+        y_inter = jnp.einsum("bhtd,bhdv->bhtv", qt, c_hat) * inter_scale[
+            ..., None]
+        y = y_intra + y_inter
+        # normalizer n_t = sum_tau D[t,tau] k_tau (decay only — NOT the
+        # q.k-weighted scores)
+        n_intra = jnp.einsum("bhts,bhsd->bhtd", dmat, kt)
+        n_t = n_intra + n_hat[:, :, None, :] * inter_scale[..., None]
+        denom = jnp.abs(jnp.einsum("bhtd,bhtd->bht", n_t, qt))
+        m_t = f_cum + m_loc
+        denom = jnp.maximum(denom, jnp.exp(-m_t))
+        y = y / denom[..., None]
+        # state update to end of chunk
+        m_end = m_loc[..., -1]
+        w_state = jnp.exp(g - m_end[..., None])                   # [B,H,L]
+        c_new = (jnp.exp(m_prev - m_end)[..., None, None] * c_hat
+                 + jnp.einsum("bhld,bhlv,bhl->bhdv", kt, vt, w_state))
+        n_new = (jnp.exp(m_prev - m_end)[..., None] * n_hat
+                 + jnp.einsum("bhld,bhl->bhd", kt, w_state))
+        m_new = f_cum[..., -1] + m_end
+        return (c_new, n_new, m_new), y
+
+    c0 = jnp.zeros((b, n_heads, dk, dk), jnp.float32)
+    n0 = jnp.zeros((b, n_heads, dk), jnp.float32)
+    m0 = jnp.full((b, n_heads), -1e30, jnp.float32)
+    # remat the chunk body: saves only the inter-chunk state per step
+    # instead of the [B,H,L,L] decay/score tiles (hillclimb: EXPERIMENTS.md
+    # §Perf zamba2/xlstm iterations)
+    _, ys = jax.lax.scan(jax.checkpoint(body), (c0, n0, m0),
+                         (qc, kc, vc, ic, fc))
+    # ys: [nc, B, H, L, dk] -> [B, S, D]
+    hidden = ys.transpose(1, 0, 3, 2, 4).reshape(b, s, d).astype(x.dtype)
+    o_gate = jax.nn.sigmoid(h_in @ params["w_o"])
+    hidden = hidden * o_gate
+    up = hidden @ params["w_proj_up"]
+    return x + jax.nn.gelu(up) @ params["w_proj_down"]
+
+
+def mamba2_seq_chunked(x: jnp.ndarray, params: dict, *, ssm_state: int,
+                       headdim: int, chunk: int = 128) -> jnp.ndarray:
+    """Chunked SSD (Mamba2's own block-decomposition algorithm).
+
+    Within a chunk: y = ((C B^T) * decay-mask) (dt x)  +  C decay S_prev;
+    across chunks: S_new = e^{A_L} S_prev + sum_tau e^{A_L - A_tau} B (dt x).
+    """
+    b, s, d = x.shape
+    xn = layers.rms_norm(x, params["norm"])
+    xi, z = _mamba_proj(xn, params, headdim)
+    xi = _causal_conv_seq(xi, params["conv"])
+    d_in = xi.shape[-1]
+    nh = d_in // headdim
+    bmat = (xi @ params["w_b"]).astype(jnp.float32)
+    cmat = (xi @ params["w_c"]).astype(jnp.float32)
+    dt = jax.nn.softplus((xn @ params["w_dt"]).astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    xh = xi.reshape(b, s, nh, headdim).astype(jnp.float32)
+
+    l = min(chunk, s)
+    assert s % l == 0
+    nc = s // l
+    # reshape to [nc, B, ...]
+    xhc = xh.reshape(b, nc, l, nh, headdim).transpose(1, 0, 3, 2, 4)
+    bc = bmat.reshape(b, nc, l, -1).transpose(1, 0, 2, 3)   # [nc,B,L,N]
+    cc = cmat.reshape(b, nc, l, -1).transpose(1, 0, 2, 3)
+    dtc = dt.reshape(b, nc, l, nh).transpose(1, 0, 3, 2)    # [nc,B,H,L]
+
+    def body(st, inp):
+        xt, bt, ct, dtt = inp
+        la = a[None, :, None] * dtt                          # [B,H,L] (<=0)
+        a_cum = jnp.cumsum(la, axis=-1)                      # A_t
+        # decay mask: exp(A_t - A_tau), causal
+        dm = jnp.exp(a_cum[:, :, :, None] - a_cum[:, :, None, :])
+        dm = jnp.where(jnp.tril(jnp.ones((l, l), bool)), dm, 0.0)
+        cb = jnp.einsum("btn,bsn->bts", ct, bt)              # [B,L,L]
+        scores = cb[:, None] * dm                            # [B,H,L,L]
+        dx = dtt[..., None] * xt                             # [B,H,L,P]
+        y_intra = jnp.einsum("bhts,bhsp->bhtp", scores, dx)
+        y_inter = jnp.einsum("btn,bhpn->bhtp", ct, st) * jnp.exp(
+            a_cum)[..., None]
+        # state update
+        w_end = jnp.exp(a_cum[..., -1:] - a_cum)             # [B,H,L]
+        st_new = (jnp.exp(a_cum[..., -1])[..., None, None] * st
+                  + jnp.einsum("bhlp,bln,bhl->bhpn", dx, bt, w_end))
+        return st_new, y_intra + y_inter
+
+    st0 = jnp.zeros((b, nh, headdim, ssm_state), jnp.float32)
+    _, ys = jax.lax.scan(jax.checkpoint(body), st0, (xhc, bc, cc, dtc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, s, nh, headdim)
+    y = y + params["d_skip"].astype(jnp.float32)[:, None] * xh
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return x + y @ params["w_out"]

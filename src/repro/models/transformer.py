@@ -1,0 +1,413 @@
+"""Config-driven decoder-only LM covering the full assigned architecture pool.
+
+Block patterns:
+  * ``attn``             — pre-norm attention + (SwiGLU | MoE) FFN; supports
+                           GQA, qk_norm, qkv bias, RoPE full/half/M-RoPE,
+                           MoE interleaving with optional shared expert.
+  * ``xlstm``            — alternating mLSTM / sLSTM blocks (no attention).
+  * ``mamba_shared_attn`` — Mamba2 blocks with a single *weight-tied*
+                           attention+MLP block invoked every k layers
+                           (zamba2).
+
+The layer stack is a ``lax.scan`` over stacked per-layer params — this keeps
+the HLO size and XLA compile time O(1) in depth (critical for the 64–81-layer
+archs on the 512-device dry-run) and is what lets a "layers" dim exist for
+pipeline parallelism.
+
+Two entry points per model:
+  * ``apply(params, tokens|embeds, positions)``  -> logits  (train / prefill)
+  * ``decode_step(params, cache, token, pos)``   -> (logits, cache)  (serve)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention, layers, moe, ssm
+from repro.parallel import sharding
+
+# sequence length above which the full [S,S] score matrix is not
+# materialized (chunked online-softmax path instead).
+CHUNKED_ATTN_THRESHOLD = 2048
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# per-pattern unit init
+# ---------------------------------------------------------------------------
+
+
+def _init_attn_unit(key, cfg: ArchConfig) -> dict:
+    """One scan unit = ``moe_interleave`` attention blocks; the last block's
+    FFN is MoE when the config has experts, the rest are dense."""
+    dt = _dtype(cfg)
+    n = max(cfg.moe_interleave, 1) if cfg.n_experts else 1
+    ks = jax.random.split(key, n)
+    blocks = []
+    for i, k in enumerate(ks):
+        ka, kf = jax.random.split(k)
+        block = {
+            "norm1": layers.init_rmsnorm(cfg.d_model, dt),
+            "norm2": layers.init_rmsnorm(cfg.d_model, dt),
+            "attn": attention.init_attention(
+                ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.resolved_head_dim, dt, qkv_bias=cfg.qkv_bias,
+                qk_norm=cfg.qk_norm),
+        }
+        is_moe = cfg.n_experts > 0 and i == n - 1
+        if is_moe:
+            block["moe"] = moe.init_moe(
+                kf, cfg.d_model, cfg.n_experts, cfg.moe_d_ff, dt,
+                shared_expert=cfg.shared_expert, shared_d_ff=cfg.d_ff)
+        else:
+            block["mlp"] = layers.init_mlp(kf, cfg.d_model, cfg.d_ff, dt)
+        blocks.append(block)
+    return {f"block{i}": b for i, b in enumerate(blocks)}
+
+
+def _init_xlstm_unit(key, cfg: ArchConfig) -> dict:
+    """One scan unit = (mLSTM block, sLSTM block)."""
+    dt = _dtype(cfg)
+    km, ks_ = jax.random.split(key)
+    return {
+        "mlstm": ssm.init_mlstm(km, cfg.d_model, cfg.n_heads, dt),
+        "slstm": ssm.init_slstm(ks_, cfg.d_model, cfg.n_heads, dt),
+    }
+
+
+def _init_mamba_unit(key, cfg: ArchConfig) -> dict:
+    return {"mamba": ssm.init_mamba2(key, cfg.d_model, cfg.ssm_state,
+                                     cfg.mamba_headdim, cfg.mamba_conv_width,
+                                     _dtype(cfg))}
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StackLayout:
+    n_units: int           # scanned units
+    tail_units: int = 0    # zamba2 trailing mamba layers (scanned separately)
+
+
+class DecoderLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        if cfg.block_pattern == "attn":
+            unit = max(cfg.moe_interleave, 1) if cfg.n_experts else 1
+            assert cfg.n_layers % unit == 0
+            self.layout = StackLayout(n_units=cfg.n_layers // unit)
+        elif cfg.block_pattern == "xlstm":
+            assert cfg.n_layers % 2 == 0
+            self.layout = StackLayout(n_units=cfg.n_layers // 2)
+        elif cfg.block_pattern == "mamba_shared_attn":
+            k = cfg.shared_attn_every
+            self.layout = StackLayout(n_units=cfg.n_layers // k,
+                                      tail_units=cfg.n_layers % k)
+        else:
+            raise ValueError(cfg.block_pattern)
+
+    # -- init ---------------------------------------------------------------
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        k_emb, k_layers, k_tail, k_shared, k_head = jax.random.split(key, 5)
+        params: dict[str, Any] = {
+            "embed": layers.init_embed(k_emb, cfg.vocab_size, cfg.d_model,
+                                       dt),
+            "final_norm": layers.init_rmsnorm(cfg.d_model, dt),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = layers.init_lm_head(k_head, cfg.d_model,
+                                                    cfg.vocab_size, dt)
+        unit_init = {
+            "attn": _init_attn_unit,
+            "xlstm": _init_xlstm_unit,
+            "mamba_shared_attn": self._init_mamba_group,
+        }[cfg.block_pattern]
+        keys = jax.random.split(k_layers, self.layout.n_units)
+        params["layers"] = jax.vmap(lambda k: unit_init(k, cfg))(keys)
+        if cfg.block_pattern == "mamba_shared_attn":
+            ka, kf = jax.random.split(k_shared)
+            params["shared_attn"] = attention.init_attention(
+                ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.resolved_head_dim, dt)
+            params["shared_mlp"] = layers.init_mlp(kf, cfg.d_model, cfg.d_ff,
+                                                   dt)
+            params["shared_norm1"] = layers.init_rmsnorm(cfg.d_model, dt)
+            params["shared_norm2"] = layers.init_rmsnorm(cfg.d_model, dt)
+            if self.layout.tail_units:
+                tkeys = jax.random.split(k_tail, self.layout.tail_units)
+                params["tail_layers"] = jax.vmap(
+                    lambda k: _init_mamba_unit(k, cfg))(tkeys)
+        return params
+
+    def _init_mamba_group(self, key, cfg: ArchConfig) -> dict:
+        """One zamba2 scan unit = ``shared_attn_every`` mamba blocks
+        (the weight-tied attention block itself lives outside the scan)."""
+        ks = jax.random.split(key, cfg.shared_attn_every)
+        stacked = jax.vmap(lambda k: _init_mamba_unit(k, cfg))(ks)
+        return stacked
+
+    # -- forward (train / prefill) -------------------------------------------
+
+    def _attn_unit_fwd(self, x, unit_params, positions, *, chunked: bool):
+        cfg = self.cfg
+        n = max(cfg.moe_interleave, 1) if cfg.n_experts else 1
+        for i in range(n):
+            bp = unit_params[f"block{i}"]
+            h = layers.rms_norm(x, bp["norm1"], cfg.norm_eps)
+            x = x + attention.attention_block(h, bp["attn"], cfg, positions,
+                                              chunked=chunked)
+            h = layers.rms_norm(x, bp["norm2"], cfg.norm_eps)
+            if "moe" in bp:
+                x = x + moe.moe_block(h, bp["moe"], cfg)
+            else:
+                x = x + layers.mlp(h, bp["mlp"])
+            # shard the residual/carry along sequence over the TP axis
+            # (Megatron SP): the remat carry chain is the dominant train-time
+            # buffer; this cuts it n_model-fold. GSPMD inserts the
+            # all-gather before qkv / reduce-scatter after wo automatically.
+            x = sharding.constrain(x, ("batch", "seq_act", None))
+        return x
+
+    def _xlstm_unit_fwd(self, x, unit_params):
+        cfg = self.cfg
+        x = ssm.mlstm_seq_chunked(x, unit_params["mlstm"], cfg.n_heads)
+        x = ssm.slstm_seq(x, unit_params["slstm"], cfg.n_heads)
+        return sharding.constrain(x, ("batch", None, None))
+
+    def _shared_attn_fwd(self, x, params, positions, *, chunked: bool):
+        cfg = self.cfg
+        h = layers.rms_norm(x, params["shared_norm1"], cfg.norm_eps)
+        x = x + attention.attention_block(h, params["shared_attn"], cfg,
+                                          positions, chunked=chunked)
+        h = layers.rms_norm(x, params["shared_norm2"], cfg.norm_eps)
+        return x + layers.mlp(h, params["shared_mlp"])
+
+    def _mamba_group_fwd(self, x, group_params, shared, positions, *,
+                         chunked: bool):
+        cfg = self.cfg
+
+        def inner(xc, lp):
+            y = ssm.mamba2_seq_chunked(xc, lp["mamba"],
+                                       ssm_state=cfg.ssm_state,
+                                       headdim=cfg.mamba_headdim)
+            return sharding.constrain(y, ("batch", None, None)), None
+
+        # per-layer remat inside the group: the outer (group) checkpoint
+        # otherwise replays the whole 6-layer group while AD saves each
+        # inner layer's residuals simultaneously (iter-3 ablation: dropping
+        # this gives -10% compute but +16 GiB peak — EXPERIMENTS §Perf)
+        if cfg.remat:
+            inner = jax.checkpoint(inner)
+        x, _ = jax.lax.scan(inner, x, group_params)
+        return self._shared_attn_fwd(x, shared, positions, chunked=chunked)
+
+    def hidden_states(self, params, tokens=None, embeds=None,
+                      positions=None) -> jnp.ndarray:
+        """Run the backbone; returns final-norm hidden states [B, S, D]."""
+        cfg = self.cfg
+        if embeds is None:
+            x = layers.embed(tokens, params["embed"])
+        else:
+            x = embeds.astype(_dtype(cfg))
+        b, s, _ = x.shape
+        if positions is None:
+            pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+            if cfg.rope_style == "mrope":
+                pos = jnp.broadcast_to(pos[None], (3, b, s))
+        else:
+            pos = positions
+        chunked = s > CHUNKED_ATTN_THRESHOLD
+        x = sharding.constrain(x, ("batch", "seq", None))
+
+        if cfg.block_pattern == "attn":
+            def unit(xc, up):
+                y = self._attn_unit_fwd(xc, up, pos, chunked=chunked)
+                return y, None
+            if cfg.remat:
+                unit = jax.checkpoint(unit)
+            x, _ = jax.lax.scan(unit, x, params["layers"])
+        elif cfg.block_pattern == "xlstm":
+            def unit(xc, up):
+                return self._xlstm_unit_fwd(xc, up), None
+            if cfg.remat:
+                unit = jax.checkpoint(unit)
+            x, _ = jax.lax.scan(unit, x, params["layers"])
+        else:  # mamba_shared_attn
+            shared = {k: params[k] for k in
+                      ("shared_attn", "shared_mlp", "shared_norm1",
+                       "shared_norm2")}
+
+            def unit(xc, gp):
+                y = self._mamba_group_fwd(xc, gp, shared, pos,
+                                          chunked=chunked)
+                return y, None
+            if cfg.remat:
+                unit = jax.checkpoint(unit)
+            x, _ = jax.lax.scan(unit, x, params["layers"])
+            if self.layout.tail_units:
+                def tail(xc, lp):
+                    y = ssm.mamba2_seq_chunked(xc, lp["mamba"],
+                                               ssm_state=cfg.ssm_state,
+                                               headdim=cfg.mamba_headdim)
+                    return y, None
+                if cfg.remat:
+                    tail = jax.checkpoint(tail)
+                x, _ = jax.lax.scan(tail, x, params["tail_layers"])
+        return layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+    def apply(self, params, tokens=None, embeds=None,
+              positions=None) -> jnp.ndarray:
+        """Full-sequence logits [B, S, V]."""
+        x = self.hidden_states(params, tokens, embeds, positions)
+        return self._logits(params, x)
+
+    def _logits(self, params, x):
+        if self.cfg.tie_embeddings:
+            return sharding.constrain(
+                x @ params["embed"]["table"].T, ("batch", None, "vocab"))
+        return layers.lm_head(x, params["lm_head"])
+
+    # -- decode (serve) -------------------------------------------------------
+
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        hd = cfg.resolved_head_dim
+
+        def stack(tree, n):
+            return jax.tree.map(lambda a: jnp.repeat(a[None], n, axis=0),
+                                tree)
+
+        if cfg.block_pattern == "attn":
+            n = max(cfg.moe_interleave, 1) if cfg.n_experts else 1
+            proto = {f"block{i}": attention.init_kv_cache(
+                batch, max_len, cfg.n_kv_heads, hd, dt) for i in range(n)}
+            return {"layers": stack(proto, self.layout.n_units)}
+        if cfg.block_pattern == "xlstm":
+            dk = cfg.d_model // cfg.n_heads
+            proto = {
+                "mlstm": ssm.mlstm_state(batch, cfg.n_heads, dk, dk),
+                "slstm": ssm.slstm_state(batch, cfg.d_model, cfg.n_heads),
+            }
+            return {"layers": stack(proto, self.layout.n_units)}
+        # zamba2: per-group mamba states + one KV cache per group site
+        d_in = 2 * cfg.d_model
+        nh = d_in // cfg.mamba_headdim
+        m_proto = ssm.mamba2_state(batch, nh, cfg.mamba_headdim,
+                                   cfg.ssm_state, cfg.mamba_conv_width, d_in)
+        proto = {
+            "mamba": stack(m_proto, cfg.shared_attn_every),
+            "shared_kv": attention.init_kv_cache(
+                batch, max_len, cfg.n_kv_heads, hd, dt),
+        }
+        cache = {"layers": stack(proto, self.layout.n_units)}
+        if self.layout.tail_units:
+            cache["tail"] = stack(m_proto, self.layout.tail_units)
+        return cache
+
+    def decode_step(self, params, cache, token, pos):
+        """token: [B] int32 (or [B,1,D] embeds for stub archs);
+        pos: scalar int32 current position. Returns (logits [B,V], cache)."""
+        cfg = self.cfg
+        if token.ndim == 1:
+            x = layers.embed(token[:, None], params["embed"])
+        else:
+            x = token.astype(_dtype(cfg))
+
+        if cfg.block_pattern == "attn":
+            n = max(cfg.moe_interleave, 1) if cfg.n_experts else 1
+
+            def unit(xc, scanned):
+                up, uc = scanned
+                new_c = {}
+                for i in range(n):
+                    bp = up[f"block{i}"]
+                    h = layers.rms_norm(xc, bp["norm1"], cfg.norm_eps)
+                    att, kv = attention.decode_attention(
+                        h, bp["attn"], cfg, uc[f"block{i}"], pos)
+                    xc = xc + att
+                    new_c[f"block{i}"] = kv
+                    h = layers.rms_norm(xc, bp["norm2"], cfg.norm_eps)
+                    if "moe" in bp:
+                        xc = xc + moe.moe_block(h, bp["moe"], cfg)
+                    else:
+                        xc = xc + layers.mlp(h, bp["mlp"])
+                return xc, new_c
+
+            x, new_cache = jax.lax.scan(unit, x,
+                                        (params["layers"], cache["layers"]))
+            cache = {"layers": new_cache}
+        elif cfg.block_pattern == "xlstm":
+            def unit(xc, scanned):
+                up, uc = scanned
+                xc, m_st = ssm.mlstm_step(xc, up["mlstm"], uc["mlstm"],
+                                          cfg.n_heads)
+                xc, s_st = ssm.slstm_step(xc, up["slstm"], uc["slstm"],
+                                          cfg.n_heads)
+                return xc, {"mlstm": m_st, "slstm": s_st}
+
+            x, new_cache = jax.lax.scan(unit, x,
+                                        (params["layers"], cache["layers"]))
+            cache = {"layers": new_cache}
+        else:
+            def unit(xc, scanned):
+                gp, gc = scanned
+
+                def inner(xc2, sc):
+                    lp, st = sc
+                    y, st_new = ssm.mamba2_step(
+                        xc2, lp["mamba"], st, ssm_state=cfg.ssm_state,
+                        headdim=cfg.mamba_headdim)
+                    return y, st_new
+
+                xc, mamba_new = jax.lax.scan(inner, xc,
+                                             (gp, gc["mamba"]))
+                h = layers.rms_norm(xc, params["shared_norm1"], cfg.norm_eps)
+                att, kv = attention.decode_attention(
+                    h, params["shared_attn"], cfg, gc["shared_kv"], pos)
+                xc = xc + att
+                h = layers.rms_norm(xc, params["shared_norm2"], cfg.norm_eps)
+                xc = xc + layers.mlp(h, params["shared_mlp"])
+                return xc, {"mamba": mamba_new, "shared_kv": kv}
+
+            x, new_layers = jax.lax.scan(
+                unit, x, (params["layers"], cache["layers"]))
+            new_cache = {"layers": new_layers}
+            if self.layout.tail_units:
+                def tail(xc, sc):
+                    lp, st = sc
+                    y, st_new = ssm.mamba2_step(
+                        xc, lp["mamba"], st, ssm_state=cfg.ssm_state,
+                        headdim=cfg.mamba_headdim)
+                    return y, st_new
+                x, tail_new = jax.lax.scan(tail, x,
+                                           (params["tail_layers"],
+                                            cache["tail"]))
+                new_cache["tail"] = tail_new
+            cache = new_cache
+
+        x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._logits(params, x)
+        return logits[:, 0], cache
+
+
+def build_model(cfg: ArchConfig) -> DecoderLM:
+    return DecoderLM(cfg)
+
+
+def init_params(cfg: ArchConfig, seed: int = 0) -> dict:
+    return DecoderLM(cfg).init(jax.random.PRNGKey(seed))

@@ -1,0 +1,15 @@
+from repro.optim.optimizers import (
+    adamw_init,
+    adamw_update,
+    sgdm_init,
+    sgdm_update,
+    make_optimizer,
+)
+from repro.optim.compression import (
+    compress_int8,
+    decompress_int8,
+    compressed_psum,
+)
+from repro.optim.schedule import cosine_schedule, linear_warmup_cosine
+
+__all__ = [k for k in dir() if not k.startswith("_")]

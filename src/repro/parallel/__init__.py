@@ -1,0 +1,10 @@
+from repro.parallel.sharding import (
+    AxisRules,
+    constrain,
+    current_rules,
+    logical_to_spec,
+    param_specs,
+    use_rules,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,107 @@
+"""GPipe-style pipeline parallelism over the "pod" axis via shard_map.
+
+At 1000+ nodes the pod axis can carry pipeline stages instead of pure data
+parallelism: each pod holds a contiguous slice of the layer stack and
+microbatches stream through with ``collective_permute`` handoffs. This
+module implements the schedule as an explicit shard_map program (GSPMD
+cannot derive pipelining automatically).
+
+Schedule: classic GPipe fill-drain over M microbatches and P stages —
+T = M + P - 1 ticks; at tick t, stage s processes microbatch (t - s) when
+0 <= t - s < M. Bubble fraction = (P-1)/(M+P-1).
+
+The layer stack must be stacked per-stage: params leaves shaped
+[P, layers_per_stage, ...] with the leading P dim sharded over the pipe
+axis. ``pipeline_forward`` runs inside shard_map: each device sees its
+own stage's params slice and exchanges activations with
+``collective_permute``.
+
+Correctness: tests/test_pipeline.py checks a 2-stage x 4-microbatch run
+against the unpipelined reference on a forced 8-device host mesh.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_forward(x, stage_params, stage_fn: Callable, *, axis: str,
+                     n_stages: int, n_micro: int):
+    """Run inside shard_map. x: [n_micro, mb, ...] (replicated along the
+    pipe axis); stage_params: this device's stage slice. Returns the final
+    stage's outputs [n_micro, mb, ...] (valid on the last stage, broadcast
+    back by the caller's out_spec choice).
+
+    stage_fn(stage_params, x_mb) -> y_mb applies this stage's layers.
+    """
+    stage = jax.lax.axis_index(axis)
+    # shard_map hands each device its [1, ...] slice of the stacked stage
+    # params — drop the leading stage dim
+    stage_params = jax.tree.map(lambda a: a[0], stage_params)
+    mb_shape = x.shape[1:]
+    n_ticks = n_micro + n_stages - 1
+
+    def tick(carry, t):
+        inflight, outputs = carry
+        # stage 0 injects microbatch t; others take the permuted activation
+        mb_idx = jnp.clip(t, 0, n_micro - 1)
+        injected = x[mb_idx]
+        cur_in = jnp.where(stage == 0, injected, inflight)
+        active = (t - stage >= 0) & (t - stage < n_micro)
+        out = stage_fn(stage_params, cur_in)
+        out = jnp.where(active, out, jnp.zeros_like(out))
+        # pass activations downstream (stage s -> s+1)
+        perm = [(i, i + 1) for i in range(n_stages - 1)]
+        nxt = jax.lax.ppermute(out, axis, perm)
+        # last stage records its finished microbatch
+        done_idx = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
+        is_done = (stage == n_stages - 1) & (t - stage >= 0) & (
+            t - stage < n_micro)
+        upd = jax.lax.dynamic_update_index_in_dim(outputs, out, done_idx, 0)
+        outputs = jnp.where(is_done, upd, outputs)
+        return (nxt, outputs), None
+
+    # mark the carries as device-varying along the pipe axis (shard_map
+    # vma typing: they hold per-stage values)
+    inflight0 = jax.lax.pcast(jnp.zeros(mb_shape, x.dtype), (axis,),
+                              to="varying")
+    outputs0 = jax.lax.pcast(jnp.zeros((n_micro,) + mb_shape, x.dtype),
+                             (axis,), to="varying")
+    (_, outputs), _ = jax.lax.scan(tick, (inflight0, outputs0),
+                                   jnp.arange(n_ticks))
+    # broadcast final outputs from the last stage to all stages so the
+    # shard_map out_spec can be replicated along the pipe axis (psum of the
+    # masked value = broadcast; ppermute can't fan out one source)
+    is_last = (stage == n_stages - 1).astype(outputs.dtype)
+    outputs = jax.lax.psum(outputs * is_last, axis)
+    return outputs
+
+
+def make_pipelined_fn(stage_fn: Callable, mesh: Mesh, *, axis: str = "pod",
+                      n_micro: int = 4, data_axes=("data",)):
+    """Wrap ``stage_fn`` into a pipelined callable.
+
+    Inputs: x [n_micro, mb, ...] and stacked stage params [P, ...].
+    """
+    n_stages = mesh.shape[axis]
+
+    def fn(x, params):
+        body = partial(pipeline_forward, stage_fn=stage_fn, axis=axis,
+                       n_stages=n_stages, n_micro=n_micro)
+        # outputs are broadcast from the last stage via ppermute, so they
+        # ARE replicated along the pipe axis — the vma checker cannot
+        # prove it statically, hence check_vma=False.
+        return shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), P(axis)),
+            out_specs=P(),
+            check_vma=False,
+        )(x, params)
+
+    return fn

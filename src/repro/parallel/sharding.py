@@ -1,0 +1,308 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / EP / SP + pod axis).
+
+Models annotate tensors with *logical* axis names; the launcher binds those
+names to physical mesh axes. This keeps model code mesh-agnostic — the same
+model lowers on a (16,16) single-pod mesh, a (2,16,16) multi-pod mesh, or a
+single CPU device (where every rule resolves to no-op replication).
+
+Logical axes used by the model zoo:
+  batch    — data parallel dimension              -> ("pod","data")
+  seq      — sequence parallelism (long-context)  -> None or "data"
+  embed    — d_model (kept replicated)            -> None
+  heads    — attention heads (tensor parallel)    -> "model"
+  kv_heads — KV heads                             -> "model"
+  mlp      — FFN hidden (tensor parallel)         -> "model"
+  vocab    — vocab dim of embedding/lm_head       -> "model"
+  expert   — MoE expert dim (expert parallel)     -> "model"
+  layers   — scanned layer stack dim              -> None (or "pod" for PP)
+  fsdp     — extra param shard dim for big archs  -> "data"
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import re
+import threading
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """Binding of logical axis names to physical mesh axes."""
+
+    rules: dict[str, Any]
+    mesh: Mesh | None = None
+
+    def resolve(self, logical: tuple) -> P:
+        phys = []
+        for name in logical:
+            if name is None:
+                phys.append(None)
+            else:
+                phys.append(self.rules.get(name))
+        return P(*phys)
+
+
+def single_pod_rules(mesh: Mesh, *, fsdp: bool = False,
+                     seq_shard: bool = False) -> AxisRules:
+    rules = {
+        "batch": ("data",),
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "vocab": "model",
+        "expert": "model",
+        "expert_cap": "data",   # MoE dispatch-capacity dim: sharded over
+        #                         data so expert FLOPs/buffers spread across
+        #                         the full mesh, not just the model axis
+        "seq": "data" if seq_shard else None,
+        "seq_act": "model",   # Megatron-style sequence sharding of the
+        #                       inter-layer residual/carry (memory, not math)
+        "fsdp": "data" if fsdp else None,
+    }
+    return AxisRules(rules=rules, mesh=mesh)
+
+
+def multi_pod_rules(mesh: Mesh, *, fsdp: bool = False,
+                    seq_shard: bool = False) -> AxisRules:
+    rules = {
+        "batch": ("pod", "data"),
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "vocab": "model",
+        "expert": "model",
+        "expert_cap": ("pod", "data"),
+        "seq": "data" if seq_shard else None,
+        "seq_act": "model",
+        "fsdp": "data" if fsdp else None,
+    }
+    return AxisRules(rules=rules, mesh=mesh)
+
+
+_LOCAL = threading.local()
+
+
+def current_rules() -> AxisRules | None:
+    return getattr(_LOCAL, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: AxisRules | None):
+    prev = current_rules()
+    _LOCAL.rules = rules
+    try:
+        yield rules
+    finally:
+        _LOCAL.rules = prev
+
+
+def logical_to_spec(logical: tuple) -> P | None:
+    r = current_rules()
+    if r is None:
+        return None
+    return r.resolve(logical)
+
+
+def constrain(x, logical: tuple):
+    """Apply a logical sharding constraint if rules + mesh are active."""
+    r = current_rules()
+    if r is None or r.mesh is None:
+        return x
+    spec = r.resolve(logical)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(r.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter partitioning: pattern-match param tree paths to logical specs
+# ---------------------------------------------------------------------------
+
+# Ordered (regex, logical axes per dim) rules over '/'-joined tree paths.
+# Matched right-to-left against trailing dims when the param has a leading
+# stacked-layers dim. "_F" marks the dim additionally sharded over fsdp.
+PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"embed/table", ("vocab", None)),
+    (r"lm_head/w", (("fsdp",), "vocab")),
+    (r"(attn|shared_attn)/wq", (("fsdp",), "heads")),
+    (r"(attn|shared_attn)/wk", (("fsdp",), "kv_heads")),
+    (r"(attn|shared_attn)/wv", (("fsdp",), "kv_heads")),
+    (r"(attn|shared_attn)/wo", ("heads", ("fsdp",))),
+    (r"(attn|shared_attn)/[bq]k?_bias", ("heads",)),
+    (r"moe/router", (None, "expert")),
+    # EP owns the model axis for expert weights; the inner dims use fsdp
+    # (expert + mlp would double-book the axis)
+    (r"moe/w_gate", ("expert", ("fsdp",), None)),
+    (r"moe/w_up", ("expert", ("fsdp",), None)),
+    (r"moe/w_down", ("expert", None, ("fsdp",))),
+    (r"(mlp|shared_mlp|shared_expert)/w_gate", (("fsdp",), "mlp")),
+    (r"(mlp|shared_mlp|shared_expert)/w_up", (("fsdp",), "mlp")),
+    (r"(mlp|shared_mlp|shared_expert)/w_down", ("mlp", ("fsdp",))),
+    (r"(mlstm|slstm)/w_(q|k|v|o|z)", (("fsdp",), "heads")),
+    (r"(mlstm|slstm)/w_proj_(up|gate)", (("fsdp",), "mlp")),
+    (r"(mlstm|slstm)/w_proj_down", ("mlp", ("fsdp",))),
+    (r"mamba/w_in", (("fsdp",), "heads")),
+    (r"mamba/w_(x|z|b|c|dt)", (("fsdp",), "heads")),
+    (r"mamba/w_out", ("heads", ("fsdp",))),
+    (r"mamba/conv", (None, None, "heads")),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for e in entry:
+            n *= mesh.shape[e]
+        return n
+    return mesh.shape[entry]
+
+
+def fit_spec(phys: list, shape, mesh: Mesh | None) -> P:
+    """Drop spec entries whose mesh-axis product does not divide the dim
+    (pjit in_shardings require exact divisibility — e.g. a 49155 vocab or
+    24 kv heads cannot shard on a 16-way axis)."""
+    if mesh is None:
+        return P(*phys)
+    fitted = []
+    for dim, entry in zip(shape, phys):
+        if entry is not None and dim % _axis_size(mesh, entry) != 0:
+            fitted.append(None)
+        else:
+            fitted.append(entry)
+    return P(*fitted)
+
+
+def spec_for_param(path: str, shape, *, scanned: bool,
+                   rules: AxisRules) -> P:
+    """Resolve the PartitionSpec for one parameter."""
+    ndim = len(shape)
+    for pat, logical in PARAM_RULES:
+        if re.search(pat, path):
+            phys = []
+            for name in logical:
+                if name is None:
+                    phys.append(None)
+                elif isinstance(name, tuple):  # fsdp-able dim
+                    ax = rules.rules.get("fsdp")
+                    phys.append(ax)
+                else:
+                    phys.append(rules.rules.get(name))
+            # pad leading dims (stacked layers / groups) with None
+            while len(phys) < ndim:
+                phys.insert(0, None)
+            phys = phys[:ndim]
+            return fit_spec(phys, shape, rules.mesh)
+    # default: replicate (norm scales, biases, small tables)
+    return P(*([None] * ndim))
+
+
+def param_specs(params, rules: AxisRules, *, scanned_prefixes=("layers",)):
+    """Build a PartitionSpec pytree matching ``params``."""
+
+    def leaf_spec(path, leaf):
+        p = _path_str(path)
+        scanned = any(p.startswith(pre) for pre in scanned_prefixes)
+        return spec_for_param(p, tuple(leaf.shape), scanned=scanned,
+                              rules=rules)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def named_shardings(params, rules: AxisRules):
+    assert rules.mesh is not None
+    specs = param_specs(params, rules)
+    return jax.tree.map(lambda s: NamedSharding(rules.mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# decode-cache partitioning (KV caches + recurrent states)
+# ---------------------------------------------------------------------------
+
+CACHE_RULES: list[tuple[str, tuple]] = [
+    (r"(shared_kv|block\d+)/[kv]$", ("batch", "seq", "kv_heads", None)),
+    (r"mlstm/C", ("batch", "heads", None, None)),
+    (r"mlstm/n", ("batch", "heads", None)),
+    (r"mlstm/m", ("batch", "heads")),
+    (r"slstm/(c|n|h)", ("batch", None)),
+    (r"slstm/m", ("batch", "heads")),
+    (r"mamba/ssm", ("batch", "heads", None, None)),
+    (r"mamba/conv", ("batch", None, "mlp")),
+    (r"tail/ssm", ("batch", "heads", None, None)),
+    (r"tail/conv", ("batch", None, "mlp")),
+]
+
+
+def cache_specs(cache, rules: AxisRules):
+    """PartitionSpec tree for a decode cache (right-aligned logical rules,
+    leading stacked-layer dims padded with None)."""
+
+    def leaf_spec(path, leaf):
+        p = _path_str(path)
+        ndim = len(leaf.shape)
+        shape = tuple(leaf.shape)
+        for pat, logical in CACHE_RULES:
+            if re.search(pat, p):
+                phys = [rules.rules.get(n) if n is not None else None
+                        for n in logical]
+                while len(phys) < ndim:
+                    phys.insert(0, None)
+                phys = phys[:ndim]
+                spec = fit_spec(phys, shape, rules.mesh)
+                if logical == ("batch", "seq", "kv_heads", None):
+                    # KV cache: if the heads dim cannot take the model axis
+                    # (e.g. 8 or 24 kv heads on a 16-way axis), split the
+                    # *sequence* dim over it instead (FlashDecoding-style) —
+                    # scores contract seq, GSPMD inserts the partial-sum
+                    # all-reduce. Otherwise a 32k/500k cache replicates.
+                    entries = list(spec)
+                    model_ax = rules.rules.get("kv_heads")
+                    used = {e for e in entries if e is not None}
+                    seq_dim = ndim - 3
+                    if (model_ax is not None and model_ax not in used
+                            and entries[seq_dim] is None
+                            and shape[seq_dim] % _axis_size(
+                                rules.mesh, model_ax) == 0):
+                        entries[seq_dim] = model_ax
+                        spec = P(*entries)
+                return spec
+        return P(*([None] * ndim))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache)
+
+
+def long_context_rules(mesh: Mesh, *, multi_pod: bool = False) -> AxisRules:
+    """Sequence-parallel rules for the batch=1 long_500k decode shape:
+    batch is unshardable (size 1) so the KV/sequence dim takes the data
+    axes instead (context parallelism)."""
+    rules = {
+        "batch": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "vocab": "model",
+        "expert": "model",
+        "expert_cap": ("pod", "data") if multi_pod else ("data",),
+        "seq": ("pod", "data") if multi_pod else ("data",),
+        "fsdp": None,
+    }
+    return AxisRules(rules=rules, mesh=mesh)

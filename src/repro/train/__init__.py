@@ -1,0 +1,4 @@
+from repro.train.trainer import Trainer, TrainerConfig
+from repro.train.monitor import HeartbeatMonitor, StragglerPolicy
+
+__all__ = ["Trainer", "TrainerConfig", "HeartbeatMonitor", "StragglerPolicy"]

@@ -1,0 +1,113 @@
+"""Fault-tolerant training loop.
+
+Composes the substrates: step functions (``repro.launch.steps``), optimizer,
+stateless-resumable data pipeline, checkpoint manager, and the
+heartbeat/straggler monitors. Properties exercised by the integration
+tests:
+
+  * **auto-resume**: on construction the trainer restores the newest
+    complete checkpoint and continues from that step; because the data
+    pipeline is a pure function of the step counter, the resumed run sees
+    exactly the batches the uninterrupted run would have;
+  * **crash-safety**: checkpoints are atomic (temp+rename) and written
+    asynchronously every ``ckpt_every`` steps;
+  * **failure injection**: ``fail_at_step`` simulates a mid-run node death
+    (raises) — the test restarts the trainer and verifies bit-identical
+    convergence with an uninterrupted run;
+  * **straggler events** recorded via ``StragglerPolicy``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.train.monitor import HeartbeatMonitor, StragglerPolicy
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    async_ckpt: bool = True
+    log_every: int = 10
+    fail_at_step: int | None = None    # failure injection (tests)
+
+
+class Trainer:
+    def __init__(self, cfg: TrainerConfig, *, train_step: Callable,
+                 init_state: Callable[[], tuple[Any, Any]],
+                 batch_fn: Callable[[int], Any],
+                 jit_kwargs: dict | None = None):
+        """``train_step(params, opt_state, batch) -> (params, opt, loss)``;
+        ``init_state()`` builds fresh (params, opt_state);
+        ``batch_fn(step)`` is the stateless data pipeline."""
+        self.cfg = cfg
+        self.batch_fn = batch_fn
+        self.ckpt = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep,
+                                      async_save=cfg.async_ckpt)
+        self.straggler = StragglerPolicy()
+        self.heartbeat = HeartbeatMonitor()
+        self._step_fn = jax.jit(train_step, **(jit_kwargs or {}))
+
+        params, opt_state = init_state()
+        restored, step = self.ckpt.restore({"params": params,
+                                            "opt": opt_state})
+        if restored is not None:
+            params, opt_state = restored["params"], restored["opt"]
+            self.start_step = step + 1
+            self.resumed = True
+        else:
+            self.start_step = 0
+            self.resumed = False
+        self.params = params
+        self.opt_state = opt_state
+        self.losses: list[float] = []
+
+    def run(self) -> dict:
+        cfg = self.cfg
+        step = self.start_step
+        while step < cfg.total_steps:
+            if cfg.fail_at_step is not None and step == cfg.fail_at_step:
+                raise RuntimeError(f"injected node failure at step {step}")
+            t0 = time.monotonic()
+            batch = self.batch_fn(step)
+            self.params, self.opt_state, loss = self._step_fn(
+                self.params, self.opt_state, batch)
+            loss = float(loss)
+            dt = time.monotonic() - t0
+            self.heartbeat.beat("host0")
+            self.straggler.observe(step, dt)
+            self.losses.append(loss)
+            if step % cfg.ckpt_every == 0 and step > self.start_step:
+                self.ckpt.save(step, {"params": self.params,
+                                      "opt": self.opt_state})
+            step += 1
+        # final checkpoint
+        self.ckpt.save(cfg.total_steps - 1,
+                       {"params": self.params, "opt": self.opt_state})
+        self.ckpt.wait()
+        return {
+            "final_loss": self.losses[-1] if self.losses else float("nan"),
+            "losses": self.losses,
+            "resumed": self.resumed,
+            "start_step": self.start_step,
+            "straggler_events": self.straggler.events,
+        }
+
+
+def eval_accuracy(apply_fn, params, images: np.ndarray,
+                  labels: np.ndarray, batch: int = 500) -> float:
+    correct = 0
+    for i in range(0, len(images), batch):
+        logits = apply_fn(params, images[i:i + batch])
+        correct += int((np.argmax(np.asarray(logits), -1)
+                        == labels[i:i + batch]).sum())
+    return correct / len(images)

@@ -1,0 +1,11 @@
+"""Test config. NOTE: no XLA device-count forcing here — smoke tests and
+benches must see the single real CPU device. Multi-device tests spawn
+subprocesses with their own XLA_FLAGS (tests/helpers.py)."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

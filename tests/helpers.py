@@ -1,0 +1,22 @@
+"""Test helpers: run a python snippet in a subprocess with N forced host
+devices (jax locks device count at first init, so multi-device tests must
+be process-isolated)."""
+
+from __future__ import annotations
+
+import os
+import pathlib
+import subprocess
+import sys
+
+SRC = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+
+
+def run_with_devices(code: str, n_devices: int = 8,
+                     timeout: int = 300) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_devices} "
+                        + env.get("XLA_FLAGS", ""))
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)

@@ -1,0 +1,154 @@
+"""Equivalence tests: flash vs full attention, chunked vs sequential SSMs,
+decode-step vs full-sequence consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+from repro.models import ssm
+
+
+@pytest.fixture
+def qkv(rng):
+    b, s, h, g, d = 2, 128, 8, 4, 32
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, g, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, g, d)), jnp.float32)
+    return q, k, v
+
+
+def test_flash_xla_matches_full(qkv):
+    q, k, v = qkv
+    ref = A.full_causal_attention(q, k, v)
+    out = A.chunked_causal_attention(q, k, v, q_chunk=32, kv_chunk=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=1e-5)
+
+
+def test_flash_xla_grads_match(qkv):
+    q, k, v = qkv
+
+    def lref(q, k, v):
+        return jnp.sum(jnp.sin(A.full_causal_attention(q, k, v)))
+
+    def lfl(q, k, v):
+        return jnp.sum(jnp.sin(A.flash_attention_xla(q, k, v, 32, 32)))
+
+    gr = jax.grad(lref, (0, 1, 2))(q, k, v)
+    gf = jax.grad(lfl, (0, 1, 2))(q, k, v)
+    for a, b in zip(gr, gf):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=3e-5, rtol=1e-4)
+
+
+def test_decode_matches_prefill_attention(rng):
+    """Sequential decode through the KV cache == full-sequence attention."""
+    import dataclasses
+    from repro import configs
+    cfg = configs.get_smoke_config("llama3-8b")
+    from repro.models import attention
+    b, s = 2, 12
+    d = cfg.d_model
+    key = jax.random.PRNGKey(0)
+    params = attention.init_attention(key, d, cfg.n_heads, cfg.n_kv_heads,
+                                      cfg.resolved_head_dim, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, d), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    full = attention.attention_block(x, params, cfg, pos, chunked=False)
+    cache = attention.init_kv_cache(b, s, cfg.n_kv_heads,
+                                    cfg.resolved_head_dim, jnp.float32)
+    outs = []
+    for t in range(s):
+        o, cache = attention.decode_attention(x[:, t:t + 1], params, cfg,
+                                              cache, jnp.int32(t))
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               atol=2e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# SSM equivalences
+# ---------------------------------------------------------------------------
+
+
+def test_mlstm_chunked_matches_sequential(rng):
+    b, s, d, h = 2, 64, 32, 4
+    params = ssm.init_mlstm(jax.random.PRNGKey(0), d, h, jnp.float32)
+    x = jnp.asarray(rng.standard_normal((b, s, d)), jnp.float32)
+    seq = ssm.mlstm_seq(x, params, h)
+    chk = ssm.mlstm_seq_chunked(x, params, h, chunk=16)
+    np.testing.assert_allclose(np.asarray(chk), np.asarray(seq),
+                               atol=2e-4, rtol=1e-3)
+
+
+def test_mlstm_step_matches_seq(rng):
+    b, s, d, h = 2, 16, 32, 4
+    params = ssm.init_mlstm(jax.random.PRNGKey(0), d, h, jnp.float32)
+    x = jnp.asarray(rng.standard_normal((b, s, d)), jnp.float32)
+    seq = ssm.mlstm_seq(x, params, h)
+    st = ssm.mlstm_state(b, h, d // h, d // h)
+    outs = []
+    for t in range(s):
+        o, st = ssm.mlstm_step(x[:, t:t + 1], params, st, h)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(seq),
+                               atol=2e-4, rtol=1e-3)
+
+
+def test_mamba2_chunked_matches_sequential(rng):
+    b, s, d = 2, 64, 32
+    params = ssm.init_mamba2(jax.random.PRNGKey(0), d, ssm_state=8,
+                             headdim=16, conv_width=4, dtype=jnp.float32)
+    x = jnp.asarray(rng.standard_normal((b, s, d)), jnp.float32)
+    seq = ssm.mamba2_seq(x, params, ssm_state=8, headdim=16)
+    chk = ssm.mamba2_seq_chunked(x, params, ssm_state=8, headdim=16,
+                                 chunk=16)
+    np.testing.assert_allclose(np.asarray(chk), np.asarray(seq),
+                               atol=2e-4, rtol=1e-3)
+
+
+def test_mamba2_step_matches_seq(rng):
+    b, s, d = 2, 12, 32
+    params = ssm.init_mamba2(jax.random.PRNGKey(0), d, ssm_state=8,
+                             headdim=16, conv_width=4, dtype=jnp.float32)
+    x = jnp.asarray(rng.standard_normal((b, s, d)), jnp.float32)
+    seq = ssm.mamba2_seq(x, params, ssm_state=8, headdim=16)
+    d_in = 2 * d
+    st = ssm.mamba2_state(b, d_in // 16, 16, 8, 4, d_in)
+    outs = []
+    for t in range(s):
+        o, st = ssm.mamba2_step(x[:, t:t + 1], params, st, ssm_state=8,
+                                headdim=16)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(seq),
+                               atol=2e-4, rtol=1e-3)
+
+
+def test_slstm_step_matches_seq(rng):
+    b, s, d, h = 2, 12, 32, 4
+    params = ssm.init_slstm(jax.random.PRNGKey(0), d, h, jnp.float32)
+    x = jnp.asarray(rng.standard_normal((b, s, d)), jnp.float32)
+    seq = ssm.slstm_seq(x, params, h)
+    st = ssm.slstm_state(b, d, h)
+    outs = []
+    for t in range(s):
+        o, st = ssm.slstm_step(x[:, t:t + 1], params, st, h)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(seq),
+                               atol=2e-4, rtol=1e-3)
+
+
+def test_mlstm_long_context_stability(rng):
+    """Stabilized gating must stay finite over long ranges (the long_500k
+    contract, scaled down)."""
+    b, s, d, h = 1, 512, 16, 2
+    params = ssm.init_mlstm(jax.random.PRNGKey(0), d, h, jnp.float32)
+    x = jnp.asarray(rng.standard_normal((b, s, d)) * 3, jnp.float32)
+    out = ssm.mlstm_seq_chunked(x, params, h, chunk=64)
+    assert np.isfinite(np.asarray(out)).all()

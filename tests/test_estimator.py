@@ -1,0 +1,64 @@
+"""Op counting (jaxpr walker) + PIM pricing of arbitrary JAX computations."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import estimator
+
+
+def test_dot_general_count():
+    f = lambda x, w: x @ w
+    c = estimator.count_ops(f, jnp.zeros((8, 16)), jnp.zeros((16, 32)))
+    assert c.macs == 8 * 16 * 32
+
+
+def test_batched_dot_count():
+    f = lambda x, w: jnp.einsum("bij,bjk->bik", x, w)
+    c = estimator.count_ops(f, jnp.zeros((4, 8, 16)), jnp.zeros((4, 16, 8)))
+    assert c.macs == 4 * 8 * 16 * 8
+
+
+def test_conv_count():
+    def f(x, k):
+        return jax.lax.conv_general_dilated(
+            x, k, (1, 1), "VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    c = estimator.count_ops(f, jnp.zeros((2, 28, 28, 3)),
+                            jnp.zeros((5, 5, 3, 6)))
+    assert c.macs == 2 * 24 * 24 * 6 * 5 * 5 * 3
+
+
+def test_scan_multiplies_counts():
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+    c = estimator.count_ops(f, jnp.zeros((4, 8)), jnp.zeros((8, 8)))
+    assert c.macs == 7 * 4 * 8 * 8
+
+
+def test_grad_counts_more_than_forward():
+    def loss(w, x):
+        return jnp.sum((x @ w) ** 2)
+    x = jnp.zeros((8, 16))
+    w = jnp.zeros((16, 4))
+    fwd = estimator.count_ops(loss, w, x)
+    bwd = estimator.count_ops(jax.grad(loss), w, x)
+    assert bwd.macs >= 2 * fwd.macs  # classic ~3x fwd for train step
+
+
+def test_pim_report_pricing():
+    c = estimator.OpCounts(macs=10_000, adds=100, muls=100)
+    ours = estimator.pim_estimate(c, "proposed")
+    theirs = estimator.pim_estimate(c, "floatpim")
+    assert theirs.energy_j / ours.energy_j == pytest.approx(3.3, rel=0.15)
+    assert ours.latency_s > 0 and ours.area_m2 > 0
+
+
+def test_estimate_fn_end_to_end():
+    rep = estimator.estimate_fn(lambda x, w: x @ w, jnp.zeros((64, 64)),
+                                jnp.zeros((64, 64)))
+    assert rep.macs == 64 ** 3
+    assert "proposed" in rep.summary()

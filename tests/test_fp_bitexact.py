@@ -1,0 +1,124 @@
+"""Bit-exactness of the PIM floating-point procedures vs IEEE-754 (XLA f32).
+
+Property tests (hypothesis): random normal-range float32 pairs must produce
+bit-identical results through the bit-plane PIM add/mul. This is the
+correctness contract of the paper's §3.3 — full float32 training precision.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fp
+
+# float32 bit patterns restricted to normal range (FTZ contract) and away
+# from overflow/subnormal-result territory for add/mul closure.
+_EXP_LO, _EXP_HI = 40, 215
+
+
+def _floats(n):
+    return st.lists(
+        st.tuples(st.integers(0, 1), st.integers(_EXP_LO, _EXP_HI),
+                  st.integers(0, 2 ** 23 - 1)),
+        min_size=n, max_size=n)
+
+
+def _pack(trips):
+    u = np.array([(s << 31) | (e << 23) | m for s, e, m in trips],
+                 np.uint32)
+    return u.view(np.float32)
+
+
+@settings(max_examples=60, deadline=None)
+@given(_floats(32), _floats(32))
+def test_fp_add_bitexact(ta, tb):
+    a, b = _pack(ta), _pack(tb)
+    got = np.asarray(fp.fp32_add_pim(a, b))
+    want = a + b
+    # FTZ: skip lanes whose true result is subnormal
+    ok = (want == 0) | (np.abs(want) >= np.float32(2 ** -126))
+    np.testing.assert_array_equal(got.view(np.uint32)[ok],
+                                  want.view(np.uint32)[ok])
+
+
+@settings(max_examples=60, deadline=None)
+@given(_floats(32), _floats(32))
+def test_fp_mul_bitexact(ta, tb):
+    a, b = _pack(ta), _pack(tb)
+    got = np.asarray(fp.fp32_mul_pim(a, b))
+    want = a * b
+    ok = ((want == 0) | (np.abs(want) >= np.float32(2 ** -126))) \
+        & np.isfinite(want)
+    np.testing.assert_array_equal(got.view(np.uint32)[ok],
+                                  want.view(np.uint32)[ok])
+
+
+def test_add_edge_cases():
+    a = np.array([1.0, 1.0, -1.0, 1.5, 1e38, -1e38, 0.0, -0.0, 1.0,
+                  np.inf, -np.inf, np.nan], np.float32)
+    b = np.array([-(1.0 + 2 ** -23), -1.0, 1.0 + 2 ** -23, 1.5, 3e38,
+                  -3e38, 0.0, -0.0, -0.0, 1.0, np.inf, 1.0], np.float32)
+    got = np.asarray(fp.fp32_add_pim(a, b))
+    want = a + b
+    same = (got.view(np.uint32) == want.view(np.uint32)) | (
+        np.isnan(got) & np.isnan(want))
+    assert same.all(), (got, want)
+
+
+def test_mul_overflow_underflow_inf_nan():
+    a = np.array([1e30, 1e30, 1e-30, -1e30, np.inf, 0.0, np.nan],
+                 np.float32)
+    b = np.array([1e30, -1e30, 1e-30, 1e-30, 2.0, 5.0, 1.0], np.float32)
+    got = np.asarray(fp.fp32_mul_pim(a, b))
+    want = a * b
+    same = (got.view(np.uint32) == want.view(np.uint32)) | (
+        np.isnan(got) & np.isnan(want))
+    assert same.all(), (got, want)
+
+
+def test_rne_tie_rounding():
+    """Exact ties must round to even (the G=1, R=S=0 branch)."""
+    # 1.5 * (1 + 2^-23): product has a tie pattern in several mantissas
+    a = np.float32(1 + 2 ** -23)
+    bs = np.array([1.5, 1 + 2 ** -23, 1 + 2 ** -22, 1.25], np.float32)
+    got = np.asarray(fp.fp32_mul_pim(np.full_like(bs, a), bs))
+    want = a * bs
+    np.testing.assert_array_equal(got.view(np.uint32),
+                                  want.view(np.uint32))
+
+
+def test_exponent_alignment_all_shifts():
+    """Alignment over every shift distance 0..30 (flexible multi-bit shift
+    — the O(Nm) method)."""
+    a = np.repeat(np.float32(1.7312543), 31)
+    b = (np.float32(1.3991) * (2.0 ** -np.arange(31))).astype(np.float32)
+    for x, y in ((a, b), (a, -b)):
+        got = np.asarray(fp.fp32_add_pim(x, y))
+        np.testing.assert_array_equal(got.view(np.uint32),
+                                      (x + y).view(np.uint32))
+
+
+def test_pim_dot():
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal(16).astype(np.float32)
+    b = rng.standard_normal(16).astype(np.float32)
+    got = float(fp.pim_dot(a, b))
+    # sequential-MAC ordering == numpy sequential accumulation
+    want = np.float32(0)
+    for x, y in zip(a, b):
+        want = np.float32(want + np.float32(x * y))
+    assert got == pytest.approx(float(want), abs=0)
+
+
+def test_pim_add_ripple_widths():
+    """The FA-based ripple adder across widths (property: equals int add)."""
+    rng = np.random.default_rng(2)
+    for n in (4, 8, 17, 32):
+        x = rng.integers(0, 2 ** (n - 1), 64).astype(np.uint32)
+        y = rng.integers(0, 2 ** (n - 1), 64).astype(np.uint32)
+        xb = fp.u32_to_bits(x, n)
+        yb = fp.u32_to_bits(y, n)
+        s, carry = fp.pim_add(xb, yb)
+        got = np.asarray(fp.bits_to_u32(s)) + (
+            np.asarray(carry).astype(np.uint64) << n)
+        np.testing.assert_array_equal(got, (x + y).astype(np.uint64))

@@ -1,0 +1,78 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps, interpret mode.
+
+Per the kernel contract: each kernel sweeps shapes/dtypes and asserts
+allclose (bit-equal for the FP kernel) against ``repro.kernels.ref``.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.pim_fp import pim_fp32_mul
+
+
+@pytest.mark.parametrize("shape", [(64,), (1000,), (7, 130)])
+@pytest.mark.parametrize("block", [128, 512])
+def test_pim_mac_sweep(rng, shape, block):
+    a = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    b = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    acc = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    got = ops.mac(a, b, acc, block=block)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.pim_mac_ref(a, b, acc)),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("mnk", [(128, 128, 128), (256, 128, 384),
+                                 (384, 256, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pim_matmul_sweep(rng, mnk, dtype):
+    m, n, k = mnk
+    a = jnp.asarray(rng.standard_normal((m, k)), dtype)
+    b = jnp.asarray(rng.standard_normal((k, n)), dtype)
+    got = ops.matmul(a, b)
+    want = ref.pim_matmul_ref(a, b)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("bshgd", [(1, 128, 4, 2, 64), (2, 128, 8, 8, 32),
+                                   (1, 64, 6, 3, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(rng, bshgd, dtype):
+    b, s, h, g, d = bshgd
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, s, g, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, s, g, d)), dtype)
+    got = ops.attention(q, k, v, q_chunk=64, kv_chunk=64)
+    want = ref.flash_attention_ref(q, k, v)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_pim_fp32_mul_bitexact_random(rng):
+    a = (rng.standard_normal(8192) * np.exp(rng.uniform(-30, 30, 8192))
+         ).astype(np.float32)
+    b = (rng.standard_normal(8192) * np.exp(rng.uniform(-30, 30, 8192))
+         ).astype(np.float32)
+    got = np.asarray(pim_fp32_mul(jnp.asarray(a), jnp.asarray(b),
+                                  block=1024))
+    want = a * b
+    ok = (got.view(np.uint32) == want.view(np.uint32)) | (
+        np.isnan(got) & np.isnan(want))
+    assert ok.all()
+
+
+def test_pim_fp32_mul_edges():
+    a = np.array([1e30, 1e30, 1e-30, 1.0, -0.0, np.inf, 1.5, 3.0,
+                  1 + 2 ** -23], np.float32)
+    b = np.array([1e30, -1e30, 1e-30, 0.0, 2.0, 2.0, 1.5, 1 + 2 ** -23,
+                  1 + 2 ** -23], np.float32)
+    got = np.asarray(pim_fp32_mul(jnp.asarray(a), jnp.asarray(b), block=16))
+    want = a * b
+    np.testing.assert_array_equal(got.view(np.uint32),
+                                  want.view(np.uint32))

@@ -1,0 +1,90 @@
+"""Device-level MTJ logic + the paper's 4-step FA (Fig. 3)."""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import fulladder, logic
+from repro.core.subarray import Subarray
+
+
+@pytest.mark.parametrize("a", [0, 1])
+@pytest.mark.parametrize("b", [0, 1])
+def test_mtj_truth_tables(a, b):
+    assert int(logic.mtj_and(a, b)) == (a & b)
+    assert int(logic.mtj_or(a, b)) == (a | b)
+    assert int(logic.mtj_xor(a, b)) == (a ^ b)
+    assert int(logic.mtj_write(a, b, "store")) == a
+
+
+def test_mtj_vectorized():
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 2, 256).astype(np.int8)
+    b = rng.integers(0, 2, 256).astype(np.int8)
+    np.testing.assert_array_equal(np.asarray(logic.mtj_and(a, b)), a & b)
+    np.testing.assert_array_equal(np.asarray(logic.mtj_or(a, b)), a | b)
+    np.testing.assert_array_equal(np.asarray(logic.mtj_xor(a, b)), a ^ b)
+
+
+def test_proposed_fa_exhaustive_and_counts():
+    """All 8 input cases: correct S/Z', 4 steps, 4 cache cells, operands
+    preserved (the training requirement that rules out the [16] FA)."""
+    for x, y, z in itertools.product([0, 1], repeat=3):
+        sub = Subarray(rows=16, cols=4)
+        cols = np.arange(4)
+        sub.write_row(0, cols, np.full(4, x, np.int8), "store")
+        sub.write_row(1, cols, np.full(4, y, np.int8), "store")
+        sub.write_row(2, cols, np.full(4, z, np.int8), "store")
+        sub.tally = type(sub.tally)()  # reset counting after setup
+        r = fulladder.proposed_fa(sub, 0, 1, 2, (4, 5, 6, 7), cols)
+        want_s = x ^ y ^ z
+        want_c = (x & y) | (z & (x ^ y))
+        assert (r.s == want_s).all(), (x, y, z)
+        assert (r.carry == want_c).all(), (x, y, z)
+        assert r.tally.steps == fulladder.PROPOSED_FA_STEPS == 4
+        # operands untouched
+        assert (sub.state[0] == x).all()
+        assert (sub.state[1] == y).all()
+        assert (sub.state[2] == z).all()
+    assert fulladder.PROPOSED_FA_CELLS == 4
+    assert fulladder.FLOATPIM_FA_STEPS == 13
+    assert fulladder.FLOATPIM_FA_CELLS == 12
+
+
+def test_floatpim_fa_function():
+    for x, y, z in itertools.product([0, 1], repeat=3):
+        s, c, steps, cells = fulladder.floatpim_fa(x, y, z)
+        assert s == x ^ y ^ z
+        assert c == (x & y) | (z & (x ^ y))
+        assert steps == 13 and cells == 12
+
+
+def test_multibit_add_matches_integer_addition():
+    rng = np.random.default_rng(1)
+    n_bits, n_cols = 8, 16
+    sub = Subarray(rows=64, cols=n_cols)
+    cols = np.arange(n_cols)
+    xs = rng.integers(0, 2 ** n_bits, n_cols)
+    ys = rng.integers(0, 2 ** n_bits, n_cols)
+    rows_x = list(range(0, n_bits))
+    rows_y = list(range(n_bits, 2 * n_bits))
+    for k in range(n_bits):
+        sub.write_row(rows_x[k], cols, (xs >> k) & 1, "store")
+        sub.write_row(rows_y[k], cols, (ys >> k) & 1, "store")
+    out_bits, carry = fulladder.multibit_add(
+        sub, rows_x, rows_y, n_bits, (40, 41, 42, 43, 44), cols)
+    got = sum((out_bits[k].astype(np.int64) << k) for k in range(n_bits))
+    got = got + (carry.astype(np.int64) << n_bits)
+    np.testing.assert_array_equal(got, xs + ys)
+
+
+def test_search_method():
+    """Fig. 4a: SL-current search detects exact pattern match."""
+    sub = Subarray(rows=4, cols=8)
+    cols = np.arange(8)
+    pattern = np.array([1, 0, 1, 1, 0, 0, 1, 0], np.int8)
+    sub.write_row(2, cols, pattern, "store")
+    assert sub.search(2, cols, pattern)
+    assert not sub.search(2, cols, 1 - pattern)
+    assert sub.tally.search_events == 2
