@@ -1,0 +1,50 @@
+"""Mapper / schedule benchmark (beyond-paper): lower real step functions
+onto the chip/tile/subarray hierarchy and report the structural overhead
+of the static schedule over the aggregate ideal, plus proposed-vs-FloatPIM
+schedule ratios on the paper's LeNet.
+
+Large archs use smoke configs here so the bench suite stays a fast CI
+smoke test; full-config mapping is exercised in tests/test_mapper.py and
+``examples/pim_cost_report.py --map``.
+"""
+
+from repro import mapper
+
+
+def _rows(tag: str, sched) -> list[str]:
+    rep = sched.report
+    rec = sched.reconcile()
+    ok = rec["counts_match"] and rec["latency_ge_ideal"]
+    return [
+        f"mapper.{tag}.subarrays,{rep.n_subarrays},",
+        f"mapper.{tag}.tiles,{rep.n_tiles},",
+        f"mapper.{tag}.chips,{rep.n_chips},",
+        f"mapper.{tag}.stages,{rep.n_stages},",
+        f"mapper.{tag}.latency_s,{rep.latency_s:.4e},",
+        f"mapper.{tag}.ideal_s,{rep.ideal_latency_s:.4e},reconciled={ok}",
+        f"mapper.{tag}.overhead,{rec['structural_overhead']:.3f},>=1",
+        f"mapper.{tag}.interval_s,{rep.pipeline_interval_s:.4e},",
+        f"mapper.{tag}.energy_j,{rep.energy_j:.4e},",
+    ]
+
+
+def run() -> list[str]:
+    rows: list[str] = []
+    lenet_train = mapper.map_lenet("train")
+    rows += _rows("lenet5.serve", mapper.map_lenet("serve"))
+    rows += _rows("lenet5.train", lenet_train)
+    for arch, tag in (("llama3-8b", "llama3_8b"),
+                      ("qwen2.5-32b", "qwen2_5_32b")):
+        rows += _rows(f"{tag}.train",
+                      mapper.map_arch(arch, "train", seq_len=8, smoke=True))
+        rows += _rows(f"{tag}.serve",
+                      mapper.map_arch(arch, "serve", seq_len=32, smoke=True))
+    # proposed vs FloatPIM on the same placed LeNet training schedule
+    ours = lenet_train.report
+    theirs = mapper.map_lenet("train", tech="floatpim").report
+    rows += [
+        f"mapper.lenet5.latency_ratio,{theirs.latency_s / ours.latency_s:.3f},paper_fig6=1.8",
+        f"mapper.lenet5.energy_ratio,{theirs.energy_j / ours.energy_j:.3f},paper_fig6=3.3",
+        f"mapper.lenet5.area_ratio,{theirs.area_m2 / ours.area_m2:.3f},paper_fig6=2.5",
+    ]
+    return rows

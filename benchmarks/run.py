@@ -2,33 +2,52 @@
 
 Prints ``name,value,derived`` CSV rows. Usage:
     PYTHONPATH=src python -m benchmarks.run [module ...]
+
+Exits non-zero if any registered benchmark raises, so CI can run the
+whole suite as a smoke test.
 """
 
+import importlib
 import sys
+import traceback
 
-from benchmarks import (arch_pim_cost, fa_steps, fig5_mac, fig6_training,
-                        fp_procedure, kernel_bench, roofline, table1_cell,
-                        ultrafast_ablation)
-
-MODULES = {
-    "table1_cell": table1_cell,
-    "fig5_mac": fig5_mac,
-    "fig6_training": fig6_training,
-    "fa_steps": fa_steps,
-    "fp_procedure": fp_procedure,
-    "ultrafast_ablation": ultrafast_ablation,
-    "arch_pim_cost": arch_pim_cost,
-    "roofline": roofline,
-    "kernel_bench": kernel_bench,
-}
+# imported lazily per run so one module's import-time failure cannot take
+# down the rest of the suite
+MODULES = (
+    "table1_cell",
+    "fig5_mac",
+    "fig6_training",
+    "fa_steps",
+    "fp_procedure",
+    "ultrafast_ablation",
+    "arch_pim_cost",
+    "roofline",
+    "kernel_bench",
+    "mapper_bench",
+)
 
 
 def main() -> None:
     names = sys.argv[1:] or list(MODULES)
+    unknown = [n for n in names if n not in MODULES]
+    if unknown:
+        print(f"unknown benchmark(s): {unknown}; have {list(MODULES)}",
+              file=sys.stderr)
+        raise SystemExit(2)
     print("name,value,derived")
+    failed = []
     for name in names:
-        for row in MODULES[name].run():
-            print(row)
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            for row in mod.run():
+                print(row)
+        except Exception:
+            traceback.print_exc()
+            print(f"BENCHMARK FAILED: {name}", file=sys.stderr)
+            failed.append(name)
+    if failed:
+        print(f"failed benchmarks: {failed}", file=sys.stderr)
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

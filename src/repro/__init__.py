@@ -1,8 +1,25 @@
 """repro: SOT-MRAM digital PIM training accelerator (Wang et al., 2020)
 reproduced and extended as a production-grade multi-pod JAX framework.
 
-Subpackages: core (the paper), models, configs, kernels (Pallas),
-parallel, optim, data, checkpoint, train, launch. See README.md.
+Subpackages: core (the paper), mapper (chip/tile/subarray lowering +
+static schedules), models, configs, kernels (Pallas), parallel, optim,
+data, checkpoint, train, launch. See README.md.
 """
 
-__version__ = "1.0.0"
+__version__ = "1.1.0"
+
+_LAZY_SUBPACKAGES = ("checkpoint", "configs", "core", "data", "kernels",
+                     "launch", "mapper", "models", "optim", "parallel",
+                     "serve", "train")
+
+
+def __getattr__(name: str):
+    # keep `import repro` dependency-free; `repro.mapper` etc. load on use
+    if name in _LAZY_SUBPACKAGES:
+        import importlib
+        return importlib.import_module(f"repro.{name}")
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY_SUBPACKAGES))

@@ -23,8 +23,8 @@ from repro.core import accelerator as acc_mod
 from repro.core import cost as cost_mod
 
 # primitives priced as pure adds / pure muls (elementwise)
-_ADD_PRIMS = {"add", "sub"}
-_MUL_PRIMS = {"mul", "div"}
+ADD_PRIMS = {"add", "sub"}
+MUL_PRIMS = {"mul", "div"}
 # primitives contributing one MAC per output element x contraction size are
 # handled explicitly below (dot_general, conv_general_dilated).
 
@@ -39,11 +39,9 @@ class OpCounts:
         return OpCounts(self.macs + o.macs, self.adds + o.adds,
                         self.muls + o.muls)
 
-    def scaled(self, k: int) -> "OpCounts":
-        return OpCounts(self.macs * k, self.adds * k, self.muls * k)
 
-
-def _dot_general_macs(eqn) -> int:
+def dot_general_dims(eqn) -> tuple[int, int, int, int]:
+    """(batch, m, n, contract) sizes of one ``dot_general`` equation."""
     lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
     dnums = eqn.params["dimension_numbers"]
     (lc, rc), (lb, rb) = dnums
@@ -53,57 +51,110 @@ def _dot_general_macs(eqn) -> int:
                      if i not in lc and i not in lb], dtype=np.int64))
     n = int(np.prod([rhs.shape[i] for i in range(rhs.ndim)
                      if i not in rc and i not in rb], dtype=np.int64))
-    return batch * m * n * contract
+    return batch, m, n, contract
 
 
-def _conv_macs(eqn) -> int:
+def conv_dims(eqn) -> tuple[int, int, int]:
+    """(out_elems, fan_in, cout) of one ``conv_general_dilated`` equation.
+
+    fan-in per output element = prod(kernel spatial) * in_channels (the rhs
+    channel dim is already per-group, so feature_group_count divides out).
+    """
     out = eqn.outvars[0].aval
     rhs = eqn.invars[1].aval  # kernel
     dnums = eqn.params["dimension_numbers"]
     out_elems = int(np.prod(out.shape, dtype=np.int64))
-    # fan-in per output element = prod(kernel spatial) * in_channels / groups
     k_shape = rhs.shape
     spatial = [k_shape[i] for i in dnums.rhs_spec[2:]]
     cin = k_shape[dnums.rhs_spec[1]]
-    groups = eqn.params.get("feature_group_count", 1)
+    cout = k_shape[dnums.rhs_spec[0]]
     fan_in = int(np.prod(spatial, dtype=np.int64)) * cin
-    del groups  # cin in rhs is already per-group
+    return out_elems, fan_in, cout
+
+
+def _dot_general_macs(eqn) -> int:
+    b, m, n, k = dot_general_dims(eqn)
+    return b * m * n * k
+
+
+def _conv_macs(eqn) -> int:
+    out_elems, fan_in, _ = conv_dims(eqn)
     return out_elems * fan_in
 
 
-def count_ops_jaxpr(jaxpr) -> OpCounts:
+# call-like primitives whose inner jaxpr is walked transparently; the
+# mapper's executor must inline exactly this set, so it imports CALL_PRIMS
+# and inner_jaxpr from here
+CALL_PRIMS = ("pjit", "closed_call", "custom_jvp_call", "custom_vjp_call",
+              "custom_vjp_call_jaxpr", "remat2", "checkpoint")
+
+
+def inner_jaxpr(eqn):
+    """The inner (Closed)Jaxpr of a CALL_PRIMS equation, or None."""
+    return (eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+            or eqn.params.get("fun_jaxpr"))
+
+
+def _count_stream(items) -> OpCounts:
+    """Price an (eqn, scale) stream — the one primitive-pricing switch."""
     total = OpCounts()
-    for eqn in jaxpr.eqns:
+    for eqn, scale in items:
         name = eqn.primitive.name
         if name == "dot_general":
-            total.macs += _dot_general_macs(eqn)
+            total.macs += scale * _dot_general_macs(eqn)
         elif name == "conv_general_dilated":
-            total.macs += _conv_macs(eqn)
-        elif name in _ADD_PRIMS:
-            total.adds += int(np.prod(eqn.outvars[0].aval.shape,
-                                      dtype=np.int64))
-        elif name in _MUL_PRIMS:
-            total.muls += int(np.prod(eqn.outvars[0].aval.shape,
-                                      dtype=np.int64))
-        elif name == "scan":
-            inner = count_ops_jaxpr(eqn.params["jaxpr"].jaxpr)
-            total = total + inner.scaled(int(eqn.params["length"]))
+            total.macs += scale * _conv_macs(eqn)
+        elif name in ADD_PRIMS:
+            total.adds += scale * int(np.prod(eqn.outvars[0].aval.shape,
+                                              dtype=np.int64))
+        elif name in MUL_PRIMS:
+            total.muls += scale * int(np.prod(eqn.outvars[0].aval.shape,
+                                              dtype=np.int64))
+    return total
+
+
+def _stream_cost_key(items) -> int:
+    """cond's worst-branch metric (macs + adds, matching the pre-refactor
+    counter's tie-breaking)."""
+    c = _count_stream(items)
+    return c.macs + c.adds
+
+
+def iter_eqns(jaxpr):
+    """Yield ``(eqn, scale)`` for every leaf equation reachable from
+    ``jaxpr``, recursing through control flow and call primitives.
+
+    ``scale`` is the static execution multiplicity (scan length products);
+    ``while`` bodies count one iteration, ``cond`` follows the costliest
+    branch. This is the single traversal shared by the op counter below and
+    by ``repro.mapper.graph`` — keep cost semantics here, in one place.
+    """
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "scan":
+            length = int(eqn.params["length"])
+            for inner_eqn, s in iter_eqns(eqn.params["jaxpr"].jaxpr):
+                yield inner_eqn, s * length
         elif name == "while":
             # trip count unknown at trace time; count one body iteration.
-            total = total + count_ops_jaxpr(eqn.params["body_jaxpr"].jaxpr)
+            yield from iter_eqns(eqn.params["body_jaxpr"].jaxpr)
         elif name == "cond":
-            branches = [count_ops_jaxpr(b.jaxpr)
-                        for b in eqn.params["branches"]]
-            total = total + max(branches, key=lambda c: c.macs + c.adds)
-        elif name in ("pjit", "closed_call", "custom_jvp_call",
-                      "custom_vjp_call", "custom_vjp_call_jaxpr",
-                      "remat2", "checkpoint"):
-            inner_p = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr") \
-                or eqn.params.get("fun_jaxpr")
+            # materialize each branch's stream once (walking twice — count
+            # then re-yield — would be exponential in cond nesting depth)
+            streams = [list(iter_eqns(b.jaxpr))
+                       for b in eqn.params["branches"]]
+            yield from max(streams, key=_stream_cost_key)
+        elif name in CALL_PRIMS:
+            inner_p = inner_jaxpr(eqn)
             if inner_p is not None:
                 inner = inner_p.jaxpr if hasattr(inner_p, "jaxpr") else inner_p
-                total = total + count_ops_jaxpr(inner)
-    return total
+                yield from iter_eqns(inner)
+        else:
+            yield eqn, 1
+
+
+def count_ops_jaxpr(jaxpr) -> OpCounts:
+    return _count_stream(iter_eqns(jaxpr))
 
 
 def count_ops(fn: Callable, *args, **kwargs) -> OpCounts:

@@ -1,0 +1,12 @@
+"""Version shims for jax.experimental.pallas API renames."""
+
+from jax.experimental.pallas import tpu as pltpu
+
+# TPUCompilerParams (jax <= 0.4.x) was renamed to CompilerParams
+CompilerParams = (getattr(pltpu, "CompilerParams", None)
+                  or getattr(pltpu, "TPUCompilerParams", None))
+if CompilerParams is None:
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; this jax version is unsupported — see "
+        "repro.kernels._compat")

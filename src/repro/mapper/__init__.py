@@ -1,0 +1,33 @@
+"""PIM mapper & schedule subsystem.
+
+Compiles any JAX function onto an explicit chip -> tile -> subarray
+hierarchy of the paper's SOT-MRAM PIM arrays:
+
+    jaxpr --(graph)--> operator graph --(placement)--> weight-stationary
+    subarray blocks --(schedule)--> cost-rolled static pipeline
+    --(executor)--> numerical execution with the Pallas PIM kernels.
+
+The aggregate estimator (``repro.core.estimator``) remains the ideal
+zero-stall bound; ``Schedule.reconcile()`` proves each schedule against it.
+"""
+
+from repro.mapper.api import map_arch, map_lenet
+from repro.mapper.executor import ScheduleExecutor, run_schedule
+from repro.mapper.graph import (ConvNode, EltwiseNode, MatmulNode, OpGraph,
+                                OpNode, build_graph)
+from repro.mapper.hardware import (ChipSpec, PIMHierarchy, SubarraySpec,
+                                   TileSpec, default_hierarchy,
+                                   make_subarray)
+from repro.mapper.placement import (NodePlacement, PlacedBlock, Placement,
+                                    PlacementPolicy, place)
+from repro.mapper.schedule import (Schedule, ScheduleReport, StageCost,
+                                   build_schedule, build_schedule_from_graph)
+
+__all__ = [
+    "ChipSpec", "ConvNode", "EltwiseNode", "MatmulNode", "NodePlacement",
+    "OpGraph", "OpNode", "PIMHierarchy", "PlacedBlock", "Placement",
+    "PlacementPolicy", "Schedule", "ScheduleExecutor", "ScheduleReport",
+    "StageCost", "SubarraySpec", "TileSpec", "build_graph", "build_schedule",
+    "build_schedule_from_graph", "default_hierarchy", "make_subarray",
+    "map_arch", "map_lenet", "place", "run_schedule",
+]

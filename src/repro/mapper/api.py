@@ -1,0 +1,93 @@
+"""One-call mapping entry points for the repo's model zoo.
+
+``map_arch("llama3-8b", kind="train")`` traces the arch's real step
+function (abstract params/opt-state/batch — nothing is allocated, so the
+full 32B configs map fine on a laptop) and compiles it into a placed,
+cost-rolled static schedule. ``map_lenet`` does the same for the paper's
+own benchmark network, whose schedule is small enough to *execute*
+numerically with ``repro.mapper.executor``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.base import ShapeSpec
+from repro.mapper import placement as placement_mod
+from repro.mapper import schedule as schedule_mod
+from repro.mapper.hardware import PIMHierarchy
+
+
+def _abstract(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def map_arch(name: str, kind: str = "train", *, seq_len: int = 128,
+             batch: int = 1, smoke: bool = False,
+             hierarchy: PIMHierarchy | None = None,
+             policy: placement_mod.PlacementPolicy | None = None,
+             tech: str = "proposed") -> schedule_mod.Schedule:
+    """Map one registered architecture's train / serve step.
+
+    ``kind='train'`` schedules a full optimizer step (fwd + bwd + update);
+    ``kind='serve'`` schedules one decode step against a ``seq_len`` cache.
+    ``smoke=True`` uses the reduced config (fast CI path).
+    """
+    from repro.launch import steps as steps_mod
+
+    cfg = (configs.get_smoke_config(name) if smoke
+           else configs.get_config(name))
+    if kind == "train" and cfg.grad_accum > 1:
+        # train steps scan grad_accum microbatches; keep batch divisible
+        batch = max(1, -(-batch // cfg.grad_accum)) * cfg.grad_accum
+    shape = ShapeSpec(f"map_{kind}", seq_len, batch, kind)
+    p_shapes = steps_mod.abstract_params(cfg)
+    if kind == "train":
+        step = steps_mod.make_train_step(cfg)
+        o_shapes = steps_mod.abstract_opt_state(cfg, p_shapes)
+        b_shapes = steps_mod.input_specs(cfg, shape)
+        return schedule_mod.build_schedule(
+            step, p_shapes, o_shapes, b_shapes,
+            hierarchy=hierarchy, policy=policy, tech=tech)
+    if kind == "serve":
+        step = steps_mod.make_serve_step(cfg)
+        c_shapes = steps_mod.abstract_cache(cfg, shape)
+        token, pos = steps_mod.decode_input_specs(cfg, shape)
+        return schedule_mod.build_schedule(
+            step, p_shapes, c_shapes, token, pos,
+            hierarchy=hierarchy, policy=policy, tech=tech)
+    raise ValueError(f"kind must be 'train' or 'serve', got {kind!r}")
+
+
+def map_lenet(kind: str = "serve", *, batch: int = 4, lr: float = 0.05,
+              hierarchy: PIMHierarchy | None = None,
+              policy: placement_mod.PlacementPolicy | None = None,
+              tech: str = "proposed") -> schedule_mod.Schedule:
+    """Map the paper's LeNet: ``serve`` = forward pass, ``train`` = one
+    SGD step on the cross-entropy loss."""
+    from repro.configs.lenet5 import CONFIG
+    from repro.models import lenet
+
+    params = lenet.init_lenet(jax.random.PRNGKey(0), CONFIG)
+    images = jax.ShapeDtypeStruct((batch, CONFIG.in_hw, CONFIG.in_hw, 1),
+                                  jnp.float32)
+    if kind == "serve":
+        return schedule_mod.build_schedule(
+            lenet.lenet_apply, _abstract(params), images,
+            hierarchy=hierarchy, policy=policy, tech=tech)
+    if kind == "train":
+        labels = jax.ShapeDtypeStruct((batch,), jnp.int32)
+
+        def train_step(params, images, labels):
+            loss, grads = jax.value_and_grad(lenet.lenet_loss)(
+                params, images, labels)
+            new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+            return new, loss
+
+        return schedule_mod.build_schedule(
+            train_step, _abstract(params), images, labels,
+            hierarchy=hierarchy, policy=policy, tech=tech)
+    raise ValueError(f"kind must be 'train' or 'serve', got {kind!r}")

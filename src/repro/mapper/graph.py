@@ -1,0 +1,182 @@
+"""Lower a jaxpr into the mapper's operator graph.
+
+Reuses ``repro.core.estimator.iter_eqns`` — the same traversal that prices
+op counts — so the graph's op totals reconcile with ``pim_estimate`` by
+construction: every costed primitive becomes exactly one node carrying the
+same MAC/add/mul count the estimator would have charged.
+
+Node kinds:
+  * ``MatmulNode``  — ``dot_general``; the rhs operand is treated as the
+    stationary weight (x @ W convention). Backward-pass matmuls therefore
+    get their own stationary operand, mirroring FloatPIM's layout which
+    keeps a transposed weight copy resident for backprop.
+  * ``ConvNode``    — ``conv_general_dilated``; stationary weight is the
+    (fan_in, cout) filter matrix (spatially replicated units share it).
+  * ``EltwiseNode`` — add/sub/mul/div, priced per element; executed in the
+    shared peripheral FP units, so no weight placement.
+
+Dependency edges are recovered by dataflow closure over *all* primitives
+(a tanh between two matmuls still links them). Var identity does not cross
+sub-jaxpr boundaries (pjit / scan bodies), so edges within an inlined call
+are precise while edges across the boundary are dropped — the scheduler
+only relies on the topological emission order, which ``iter_eqns``
+guarantees.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.core import estimator
+from repro.core.estimator import OpCounts
+
+
+@dataclasses.dataclass
+class OpNode:
+    idx: int
+    kind: str                 # matmul | conv | eltwise
+    name: str                 # "<primitive>.<idx>"
+    repeat: int               # static multiplicity (scan length product)
+    deps: list[int]
+    out_shape: tuple[int, ...]
+    out_elems: int            # per execution
+    macs: int = 0             # totals including ``repeat``
+    adds: int = 0
+    muls: int = 0
+    eqn_id: int = 0           # id() of the source eqn (executor lookup key)
+
+    @property
+    def weight_shape(self) -> tuple[int, int] | None:
+        return None
+
+    @property
+    def weight_values(self) -> int:
+        ws = self.weight_shape
+        return ws[0] * ws[1] if ws else 0
+
+
+@dataclasses.dataclass
+class MatmulNode(OpNode):
+    batch: int = 1
+    m: int = 0
+    k: int = 0
+    n: int = 0
+
+    @property
+    def weight_shape(self) -> tuple[int, int]:
+        # batched matmuls (attention scores etc.) hold each batch member's
+        # stationary operand; fold batch into the column dimension.
+        return (self.k, self.n * self.batch)
+
+
+@dataclasses.dataclass
+class ConvNode(OpNode):
+    fan_in: int = 0
+    cout: int = 0
+
+    @property
+    def weight_shape(self) -> tuple[int, int]:
+        return (self.fan_in, self.cout)
+
+
+@dataclasses.dataclass
+class EltwiseNode(OpNode):
+    op: str = "add"           # add | sub | mul | div
+    n_elems: int = 0          # totals including ``repeat``
+
+
+@dataclasses.dataclass
+class OpGraph:
+    """Cost-relevant operator graph of one traced function."""
+
+    nodes: list[OpNode]
+    closed_jaxpr: Any                       # jax.core.ClosedJaxpr
+    in_tree: Any
+    out_tree: Any
+    fn: Callable | None = None
+
+    def totals(self) -> OpCounts:
+        c = OpCounts()
+        for nd in self.nodes:
+            c.macs += nd.macs
+            c.adds += nd.adds
+            c.muls += nd.muls
+        return c
+
+    def weight_values(self) -> int:
+        return sum(nd.weight_values for nd in self.nodes)
+
+    def weight_bits(self, n_bits: int = 32) -> int:
+        return self.weight_values() * n_bits
+
+    def matmul_like(self) -> list[OpNode]:
+        return [nd for nd in self.nodes if nd.kind in ("matmul", "conv")]
+
+
+def _out_elems(eqn) -> int:
+    return int(np.prod(eqn.outvars[0].aval.shape, dtype=np.int64))
+
+
+def build_graph_from_jaxpr(closed_jaxpr, in_tree=None, out_tree=None,
+                           fn: Callable | None = None) -> OpGraph:
+    nodes: list[OpNode] = []
+    origin: dict[int, frozenset[int]] = {}   # id(var) -> producing node idxs
+
+    def read_origin(v) -> frozenset[int]:
+        return origin.get(id(v), frozenset())
+
+    for eqn, scale in estimator.iter_eqns(closed_jaxpr.jaxpr):
+        name = eqn.primitive.name
+        src = frozenset().union(*[read_origin(v) for v in eqn.invars]) \
+            if eqn.invars else frozenset()
+        node: OpNode | None = None
+        idx = len(nodes)
+        out_shape = tuple(eqn.outvars[0].aval.shape)
+        if name == "dot_general":
+            b, m, n, k = estimator.dot_general_dims(eqn)
+            node = MatmulNode(
+                idx=idx, kind="matmul", name=f"dot_general.{idx}",
+                repeat=scale, deps=sorted(src), out_shape=out_shape,
+                out_elems=_out_elems(eqn), macs=scale * b * m * n * k,
+                eqn_id=id(eqn), batch=b, m=m, k=k, n=n)
+        elif name == "conv_general_dilated":
+            out_elems, fan_in, cout = estimator.conv_dims(eqn)
+            node = ConvNode(
+                idx=idx, kind="conv", name=f"conv.{idx}",
+                repeat=scale, deps=sorted(src), out_shape=out_shape,
+                out_elems=out_elems, macs=scale * out_elems * fan_in,
+                eqn_id=id(eqn), fan_in=fan_in, cout=cout)
+        elif name in estimator.ADD_PRIMS or name in estimator.MUL_PRIMS:
+            n_el = _out_elems(eqn)
+            is_add = name in estimator.ADD_PRIMS
+            node = EltwiseNode(
+                idx=idx, kind="eltwise", name=f"{name}.{idx}",
+                repeat=scale, deps=sorted(src), out_shape=out_shape,
+                out_elems=n_el,
+                adds=scale * n_el if is_add else 0,
+                muls=0 if is_add else scale * n_el,
+                eqn_id=id(eqn), op=name, n_elems=scale * n_el)
+        if node is not None:
+            nodes.append(node)
+            out_origin = frozenset({node.idx})
+        else:
+            out_origin = src
+        for v in eqn.outvars:
+            origin[id(v)] = out_origin
+    return OpGraph(nodes=nodes, closed_jaxpr=closed_jaxpr,
+                   in_tree=in_tree, out_tree=out_tree, fn=fn)
+
+
+def build_graph(fn: Callable, *args, **kwargs) -> OpGraph:
+    """Trace ``fn(*args, **kwargs)`` (ShapeDtypeStructs welcome — no
+    allocation) and lower its jaxpr to an ``OpGraph``."""
+    closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(*args, **kwargs)
+    flat, in_tree = jax.tree.flatten((args, kwargs))
+    del flat
+    out_tree = jax.tree.structure(out_shape)
+    return build_graph_from_jaxpr(closed, in_tree=in_tree, out_tree=out_tree,
+                                  fn=fn)

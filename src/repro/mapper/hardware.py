@@ -1,0 +1,194 @@
+"""Explicit PIM hardware hierarchy: chip -> tile -> 1024x1024 subarray.
+
+The paper prices a single MAC (§3.3) and the Fig. 6 training comparison
+aggregates op counts; neither says *where* a layer's weights live. This
+module gives the mapper a concrete machine to place onto:
+
+  * ``SubarraySpec``  — one 1024x1024 SOT-MRAM (or ReRAM) macro. Cell-level
+    cost terms roll up from ``repro.core.cell`` / ``repro.core.cost`` (the
+    §3.3 closed forms), so a subarray knows its per-MAC latency/energy, its
+    per-bit write cost, and its weight capacity after reserving the paper's
+    per-unit workspace cells (FA caches + ping-pong accumulator columns for
+    the proposed design; the 455 intermediate cells for FloatPIM).
+  * ``TileSpec``      — a cluster of subarrays on a shared activation bus.
+  * ``ChipSpec``      — a mesh NoC of tiles; hop latency/energy per bit are
+    NVSim-style knobs (the paper's own peripherals come from NVSim runs).
+  * ``PIMHierarchy``  — the tree, plus the address arithmetic (flat subarray
+    index -> (chip, tile, local)) and the inter-level transfer cost model
+    the scheduler charges for activations crossing tile/chip boundaries.
+
+Weight layout convention: one f32 value occupies ``n_bits`` cells along a
+row, so a subarray stores ``weight_rows x weight_cols`` values and exposes
+``cols`` column-parallel MAC lanes (operands broadcast on shared row lines —
+the §4.3 flexibility claim, and the same lane provisioning rule
+``repro.core.estimator.pim_estimate`` uses).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core import accelerator as acc_mod
+from repro.core import cell as cell_mod
+from repro.core import cost as cost_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class SubarraySpec:
+    """One PIM subarray macro with rolled-up §3.3 cost terms."""
+
+    rows: int = acc_mod.SUBARRAY_ROWS
+    cols: int = acc_mod.SUBARRAY_COLS
+    n_bits: int = 32                     # cells per stored value
+    workspace_rows: int = acc_mod.WORKSPACE_PROPOSED
+    # rolled-up op costs (filled in by make_subarray)
+    t_mac_s: float = 0.0
+    e_mac_j: float = 0.0
+    t_add_s: float = 0.0
+    e_add_j: float = 0.0
+    t_mul_s: float = 0.0
+    e_mul_j: float = 0.0
+    t_write_bit_s: float = 0.0
+    e_write_bit_j: float = 0.0
+    cell_area_m2: float = 0.0
+    periph_factor: float = 0.35
+
+    @property
+    def weight_rows(self) -> int:
+        """Rows available for weights after the per-unit workspace reserve."""
+        return self.rows - self.workspace_rows
+
+    @property
+    def weight_cols(self) -> int:
+        """Values per row (a value spans ``n_bits`` cells)."""
+        return self.cols // self.n_bits
+
+    @property
+    def capacity_values(self) -> int:
+        return self.weight_rows * self.weight_cols
+
+    @property
+    def mac_lanes(self) -> int:
+        """Column-parallel MAC units (same rule as ``pim_estimate``)."""
+        return self.cols
+
+    @property
+    def area_m2(self) -> float:
+        return (self.rows * self.cols * self.cell_area_m2
+                * (1.0 + self.periph_factor))
+
+
+def make_subarray(tech: str = "proposed") -> SubarraySpec:
+    """Roll §3.3 cell costs up into one subarray's cost terms."""
+    accel = acc_mod.PIMAccelerator(tech)
+    mac = accel.mac
+    workspace = (acc_mod.WORKSPACE_FLOATPIM if tech == "floatpim"
+                 else acc_mod.WORKSPACE_PROPOSED)
+    return SubarraySpec(
+        workspace_rows=workspace,
+        t_mac_s=mac.t_mac_s, e_mac_j=mac.e_mac_j,
+        t_add_s=mac.t_add_s, e_add_j=mac.e_add_j,
+        t_mul_s=mac.t_mul_s, e_mul_j=mac.e_mul_j,
+        t_write_bit_s=accel.t_write_bit, e_write_bit_j=accel.e_write_bit,
+        cell_area_m2=accel.cell_area,
+        periph_factor=accel.periph_factor,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class TileSpec:
+    """Subarrays sharing one activation bus (single-hop, full bandwidth)."""
+
+    subarrays: int = 16
+    bus_bits_per_s: float = 1.024e12     # 128 GB/s shared activation bus
+    e_bus_bit_j: float = 0.05e-12        # DAC/driver energy per moved bit
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    """Tiles on a 2D-mesh NoC."""
+
+    tiles: int = 64
+    noc_bits_per_s: float = 5.12e11      # 64 GB/s per NoC link
+    t_hop_s: float = 2.0e-9              # router+link latency per hop
+    e_hop_bit_j: float = 0.1e-12         # per bit per hop
+
+    @property
+    def mesh_dim(self) -> int:
+        return max(1, int(math.isqrt(self.tiles)))
+
+
+@dataclasses.dataclass(frozen=True)
+class PIMHierarchy:
+    """chip -> tile -> subarray tree + transfer cost model."""
+
+    tech: str
+    subarray: SubarraySpec
+    tile: TileSpec = TileSpec()
+    chip: ChipSpec = ChipSpec()
+    # inter-chip transfers (off-package SerDes) — only hit by huge models
+    interchip_bits_per_s: float = 2.56e11
+    e_interchip_bit_j: float = 1.0e-12
+
+    @property
+    def subarrays_per_chip(self) -> int:
+        return self.tile.subarrays * self.chip.tiles
+
+    @property
+    def chip_capacity_values(self) -> int:
+        return self.subarrays_per_chip * self.subarray.capacity_values
+
+    def locate(self, sub_idx: int) -> tuple[int, int, int]:
+        """Flat subarray index -> (chip, tile-in-chip, subarray-in-tile)."""
+        chip, rem = divmod(sub_idx, self.subarrays_per_chip)
+        tile, local = divmod(rem, self.tile.subarrays)
+        return chip, tile, local
+
+    def n_chips_for(self, n_subarrays: int) -> int:
+        return max(1, math.ceil(n_subarrays / self.subarrays_per_chip))
+
+    def n_tiles_for(self, n_subarrays: int) -> int:
+        return max(1, math.ceil(n_subarrays / self.tile.subarrays))
+
+    def _tile_hops(self, tile_a: int, tile_b: int) -> int:
+        """Manhattan distance on the chip's tile mesh."""
+        d = self.chip.mesh_dim
+        ax, ay = tile_a % d, tile_a // d
+        bx, by = tile_b % d, tile_b // d
+        return abs(ax - bx) + abs(ay - by)
+
+    def transfer_cost(self, bits: int, src_sub: int,
+                      dst_sub: int) -> tuple[float, float]:
+        """(latency_s, energy_j) to move ``bits`` from one subarray's tile
+        to another's. Same subarray (co-located producer/consumer) -> free;
+        same tile -> one bus transaction; same chip -> NoC hops; different
+        chips -> off-package link."""
+        if bits <= 0 or src_sub == dst_sub:
+            return 0.0, 0.0
+        c_a, t_a, _ = self.locate(src_sub)
+        c_b, t_b, _ = self.locate(dst_sub)
+        if c_a != c_b:
+            t = bits / self.interchip_bits_per_s + self.chip.t_hop_s
+            e = bits * self.e_interchip_bit_j
+            return t, e
+        if t_a == t_b:
+            t = bits / self.tile.bus_bits_per_s
+            e = bits * self.tile.e_bus_bit_j
+            return t, e
+        hops = self._tile_hops(t_a, t_b)
+        t = bits / self.chip.noc_bits_per_s + hops * self.chip.t_hop_s
+        e = bits * hops * self.chip.e_hop_bit_j
+        return t, e
+
+    def area_m2(self, n_subarrays: int) -> float:
+        return n_subarrays * self.subarray.area_m2
+
+
+def default_hierarchy(tech: str = "proposed", **overrides) -> PIMHierarchy:
+    """The hierarchy used throughout unless a caller overrides knobs.
+
+    ``overrides`` may replace ``tile`` / ``chip`` specs or scalar knobs of
+    ``PIMHierarchy`` (e.g. ``tile=TileSpec(subarrays=32)``).
+    """
+    return PIMHierarchy(tech=tech, subarray=make_subarray(tech), **overrides)

@@ -1,0 +1,184 @@
+"""Weight-stationary placement of an OpGraph onto a PIMHierarchy.
+
+Each matmul/conv node's stationary (k x n) weight matrix is tiled into
+subarray-sized blocks — ``weight_rows`` values tall (1024 rows minus the
+paper's workspace reserve) by ``weight_cols`` values wide (1024 cells /
+32 bits per value) — and the blocks are packed onto subarrays in node
+order. Two refinements over naive one-block-per-subarray:
+
+  * **small-node sharing** — a single-block node whose k rows fit in the
+    open partially-filled subarray's free row-bands is co-located there
+    (shelf packing by whole rows, so co-located grids never overlap), and
+    a LeNet does not burn five subarrays on 21.7k parameters;
+  * **replication** — small *hot* nodes (high MACs per provisioned lane)
+    are replicated ``r`` times; replicas serve interleaved activation rows,
+    multiplying throughput at the cost of ``r`` x area. This is the
+    FloatPIM-style throughput lever the aggregate estimator cannot express.
+
+Placements are stored aggregately (``NodePlacement`` holds the block grid,
+not per-block objects) so billion-parameter graphs stay cheap to place;
+``iter_blocks`` materializes ``PlacedBlock``s on demand for the executor.
+
+Eltwise nodes run in the shared peripheral FP units and take no placement.
+
+Nodes inside ``scan`` bodies (``repeat > 1`` — scanned layer stacks, grad
+accumulation) are placed once and time-multiplexed: successive iterations
+stream their weight slice into the same block grid, and the scheduler
+serializes all ``repeat`` passes through the placed lanes. Expanding
+stacked layer weights into ``repeat`` resident copies is a policy a later
+sharding PR can add on top.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterator
+
+from repro.mapper.graph import OpGraph, OpNode
+from repro.mapper.hardware import PIMHierarchy
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementPolicy:
+    """Knobs for the greedy weight-stationary packer."""
+
+    replicate_small_hot: bool = True
+    small_node_subarrays: int = 2     # replication candidates span <= this
+    hot_macs_per_lane: float = 65536  # replicate until macs/lane <= this
+    max_replicas: int = 8
+    share_subarrays: bool = True      # co-locate whole small nodes
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacedBlock:
+    """One weight block resident on one subarray (value coordinates)."""
+
+    node: int
+    replica: int
+    row0: int
+    col0: int
+    n_rows: int
+    n_cols: int
+    subarray: int
+
+
+@dataclasses.dataclass
+class NodePlacement:
+    """Aggregate placement of one node's weight block grid."""
+
+    node: int
+    weight_rows: int                  # k (values)
+    weight_cols: int                  # n (values)
+    row_blocks: int
+    col_blocks: int
+    replicas: int
+    first_subarray: int
+    shared: bool = False              # True -> rides the open subarray
+
+    @property
+    def blocks_per_replica(self) -> int:
+        return self.row_blocks * self.col_blocks
+
+    @property
+    def n_subarrays(self) -> int:
+        """Distinct subarrays this node occupies (shared nodes count the
+        host subarray once; it may also host other nodes)."""
+        return 1 if self.shared else self.blocks_per_replica * self.replicas
+
+    def lanes(self, hierarchy: PIMHierarchy) -> int:
+        return self.n_subarrays * hierarchy.subarray.mac_lanes
+
+    def iter_blocks(self, hierarchy: PIMHierarchy,
+                    replica: int | None = None) -> Iterator[PlacedBlock]:
+        sub = hierarchy.subarray
+        br, bc = sub.weight_rows, sub.weight_cols
+        replicas = [replica] if replica is not None else range(self.replicas)
+        for rep in replicas:
+            for i in range(self.row_blocks):
+                for j in range(self.col_blocks):
+                    flat = (rep * self.blocks_per_replica
+                            + i * self.col_blocks + j)
+                    yield PlacedBlock(
+                        node=self.node, replica=rep,
+                        row0=i * br, col0=j * bc,
+                        n_rows=min(br, self.weight_rows - i * br),
+                        n_cols=min(bc, self.weight_cols - j * bc),
+                        subarray=(self.first_subarray
+                                  if self.shared
+                                  else self.first_subarray + flat))
+
+
+@dataclasses.dataclass
+class Placement:
+    hierarchy: PIMHierarchy
+    policy: PlacementPolicy
+    node_placements: dict[int, NodePlacement]
+    n_subarrays: int
+
+    @property
+    def n_tiles(self) -> int:
+        return self.hierarchy.n_tiles_for(self.n_subarrays)
+
+    @property
+    def n_chips(self) -> int:
+        return self.hierarchy.n_chips_for(self.n_subarrays)
+
+    @property
+    def area_m2(self) -> float:
+        return self.hierarchy.area_m2(self.n_subarrays)
+
+    def home_subarray(self, node_idx: int) -> int | None:
+        np_ = self.node_placements.get(node_idx)
+        return np_.first_subarray if np_ is not None else None
+
+
+def _replicas_for(node: OpNode, blocks: int, lanes_per_sub: int,
+                  policy: PlacementPolicy) -> int:
+    if not policy.replicate_small_hot or blocks > policy.small_node_subarrays:
+        return 1
+    lanes = blocks * lanes_per_sub
+    want = math.ceil(node.macs / (lanes * policy.hot_macs_per_lane))
+    return max(1, min(policy.max_replicas, want))
+
+
+def place(graph: OpGraph, hierarchy: PIMHierarchy,
+          policy: PlacementPolicy | None = None) -> Placement:
+    """Greedy weight-stationary packing in topological node order."""
+    policy = policy or PlacementPolicy()
+    sub = hierarchy.subarray
+    placements: dict[int, NodePlacement] = {}
+    next_free = 0                     # next unallocated subarray index
+    open_sub = -1                     # partially-filled shared subarray
+    open_free_rows = 0                # whole row-bands left on the shelf
+
+    for node in graph.matmul_like():
+        k, n = node.weight_shape
+        row_blocks = max(1, math.ceil(k / sub.weight_rows))
+        col_blocks = max(1, math.ceil(n / sub.weight_cols))
+        blocks = row_blocks * col_blocks
+        replicas = _replicas_for(node, blocks, sub.mac_lanes, policy)
+        # the shelf hands out whole row-bands (a co-located node gets all
+        # weight_cols columns of its k rows), so co-located grids can
+        # never physically overlap.
+        if (policy.share_subarrays and blocks == 1 and replicas == 1
+                and k <= open_free_rows):
+            placements[node.idx] = NodePlacement(
+                node=node.idx, weight_rows=k, weight_cols=n,
+                row_blocks=1, col_blocks=1, replicas=1,
+                first_subarray=open_sub, shared=True)
+            open_free_rows -= k
+            continue
+        placements[node.idx] = NodePlacement(
+            node=node.idx, weight_rows=k, weight_cols=n,
+            row_blocks=row_blocks, col_blocks=col_blocks,
+            replicas=replicas, first_subarray=next_free)
+        total_blocks = blocks * replicas
+        if blocks == 1 and replicas == 1 and k < sub.weight_rows:
+            # this node's lone block opens (or refreshes) the shared shelf
+            open_sub = next_free
+            open_free_rows = sub.weight_rows - k
+        next_free += total_blocks
+    return Placement(hierarchy=hierarchy, policy=policy,
+                     node_placements=placements,
+                     n_subarrays=max(1, next_free))

@@ -57,6 +57,43 @@ def test_pim_report_pricing():
     assert ours.latency_s > 0 and ours.area_m2 > 0
 
 
+def test_lenet_forward_macs_hand_computed():
+    """Conv path (_conv_macs) against hand-computed LeNet numbers."""
+    from repro.configs.lenet5 import CONFIG
+    from repro.models import lenet
+
+    b = 4
+    params = lenet.init_lenet(jax.random.PRNGKey(0), CONFIG)
+    imgs = jnp.zeros((b, 28, 28, 1), jnp.float32)
+    c = estimator.count_ops(lenet.lenet_apply, params, imgs)
+    conv1 = 24 * 24 * 6 * (5 * 5 * 1)      # out 24x24x6, fan-in 25
+    conv2 = 8 * 8 * 16 * (5 * 5 * 6)       # out 8x8x16, fan-in 150
+    fcs = 256 * 64 + 64 * 35 + 35 * 10
+    assert c.macs == b * (conv1 + conv2 + fcs)
+    # bias adds alone: conv/fc outputs each get one add per element
+    bias_adds = b * (24 * 24 * 6 + 8 * 8 * 16 + 64 + 35 + 10)
+    assert c.adds >= bias_adds
+    # avg-pool divides by 4: one mul-priced op per pooled element
+    pool_divs = b * (12 * 12 * 6 + 4 * 4 * 16)
+    assert c.muls >= pool_divs
+
+
+def test_iter_eqns_scales_nested_scans():
+    def f(x, w):
+        def inner(c, _):
+            return c @ w, None
+
+        def outer(c, _):
+            y, _ = jax.lax.scan(inner, c, None, length=3)
+            return y, None
+
+        y, _ = jax.lax.scan(outer, x, None, length=2)
+        return y
+
+    c = estimator.count_ops(f, jnp.zeros((4, 8)), jnp.zeros((8, 8)))
+    assert c.macs == 2 * 3 * 4 * 8 * 8
+
+
 def test_estimate_fn_end_to_end():
     rep = estimator.estimate_fn(lambda x, w: x @ w, jnp.zeros((64, 64)),
                                 jnp.zeros((64, 64)))

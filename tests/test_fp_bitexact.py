@@ -7,6 +7,8 @@ correctness contract of the paper's §3.3 — full float32 training precision.
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional test extra: pip install .[test]
 from hypothesis import given, settings, strategies as st
 
 from repro.core import fp
