@@ -24,6 +24,7 @@ MODULES = (
     "roofline",
     "kernel_bench",
     "mapper_bench",
+    "executor_bench",
 )
 
 

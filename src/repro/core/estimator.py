@@ -28,6 +28,41 @@ MUL_PRIMS = {"mul", "div"}
 # primitives contributing one MAC per output element x contraction size are
 # handled explicitly below (dot_general, conv_general_dilated).
 
+# Lowering-rule registry: primitive name -> mapper node kind. The single
+# source of truth for "which primitives are PIM-lowerable", shared by the
+# op counter here, the graph builder (repro.mapper.graph) and the
+# executor/compiler rule table (repro.mapper.lowering).
+NODE_KINDS: dict[str, str] = {
+    "dot_general": "matmul",
+    "conv_general_dilated": "conv",
+    **{p: "eltwise" for p in ADD_PRIMS | MUL_PRIMS},
+}
+
+
+def register_node_kind(prim_name: str, kind: str = "eltwise") -> None:
+    """Register a binary elementwise primitive as PIM-lowerable across all
+    three consumers (counter, graph builder, lowering rules).
+
+    Only ``kind="eltwise"`` is open for registration: the matmul/conv
+    paths read ``dot_general``/conv-specific eqn params and would crash on
+    a foreign primitive. A registered primitive is priced as adds if its
+    name is in ``ADD_PRIMS``, else as muls; the kernel lowering rule
+    declines ops it has no pim_mac decomposition for (falling back to the
+    primitive's bind), so registration affects costing, placement and
+    scheduling, not numerics.
+    """
+    if kind != "eltwise":
+        raise ValueError(
+            f"only 'eltwise' primitives are registrable, got {kind!r}; "
+            f"matmul/conv lowering is dot_general/conv_general_dilated "
+            f"specific")
+    NODE_KINDS[prim_name] = kind
+
+
+def node_kind(prim_name: str) -> str | None:
+    """Mapper node kind of a primitive, or None if it is not lowerable."""
+    return NODE_KINDS.get(prim_name)
+
 
 @dataclasses.dataclass
 class OpCounts:
@@ -100,16 +135,18 @@ def _count_stream(items) -> OpCounts:
     total = OpCounts()
     for eqn, scale in items:
         name = eqn.primitive.name
-        if name == "dot_general":
+        kind = node_kind(name)
+        if kind == "matmul":
             total.macs += scale * _dot_general_macs(eqn)
-        elif name == "conv_general_dilated":
+        elif kind == "conv":
             total.macs += scale * _conv_macs(eqn)
-        elif name in ADD_PRIMS:
-            total.adds += scale * int(np.prod(eqn.outvars[0].aval.shape,
-                                              dtype=np.int64))
-        elif name in MUL_PRIMS:
-            total.muls += scale * int(np.prod(eqn.outvars[0].aval.shape,
-                                              dtype=np.int64))
+        elif kind == "eltwise":
+            n_el = scale * int(np.prod(eqn.outvars[0].aval.shape,
+                                       dtype=np.int64))
+            if name in ADD_PRIMS:
+                total.adds += n_el
+            else:
+                total.muls += n_el
     return total
 
 

@@ -19,6 +19,13 @@ does):
 ``pim_matmul`` — blocked matmul, grid (M/bm, N/bn, K/bk), accumulating in
                  VMEM scratch, writing the output tile once on the last K
                  step (K innermost = sequential on TPU).
+
+Both carry a ``custom_vjp`` whose backward passes are themselves PIM
+kernel calls (dA = g @ B^T and dB = A^T @ g are in-array matmuls; the
+eltwise cotangents are in-array MACs) — the paper's training claim is
+exactly that backprop stays in the array, and without the VJP the
+compiled schedule path could not differentiate through ``pallas_call``
+at all.
 """
 
 from __future__ import annotations
@@ -42,10 +49,7 @@ def _mac_kernel(a_ref, b_ref, acc_ref, o_ref):
     o_ref[...] = acc_ref[...] + a_ref[...] * b_ref[...]
 
 
-def pim_mac(a: jnp.ndarray, b: jnp.ndarray, acc: jnp.ndarray,
-            *, block: int = 1024, interpret: bool = True) -> jnp.ndarray:
-    """Elementwise acc + a*b, tiled along the last dim."""
-    assert a.shape == b.shape == acc.shape
+def _mac_call(a, b, acc, block: int, interpret: bool) -> jnp.ndarray:
     orig_shape = a.shape
     n = a.size
     pad = (-n) % block
@@ -62,6 +66,36 @@ def pim_mac(a: jnp.ndarray, b: jnp.ndarray, acc: jnp.ndarray,
         interpret=interpret,
     )(a2, b2, acc2)
     return out.reshape(-1)[:n].reshape(orig_shape)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _pim_mac_vjp(a, b, acc, block, interpret):
+    return _mac_call(a, b, acc, block, interpret)
+
+
+def _pim_mac_fwd(a, b, acc, block, interpret):
+    return _mac_call(a, b, acc, block, interpret), (a, b)
+
+
+def _pim_mac_bwd(block, interpret, res, g):
+    # out = acc + a*b: da = g*b and db = g*a are themselves in-array MACs
+    # (accumulating into zero); dacc passes through.
+    a, b = res
+    zero = jnp.zeros_like(g)
+    da = _pim_mac_vjp(g, b.astype(g.dtype), zero, block, interpret)
+    db = _pim_mac_vjp(g, a.astype(g.dtype), zero, block, interpret)
+    return da.astype(a.dtype), db.astype(b.dtype), g
+
+
+_pim_mac_vjp.defvjp(_pim_mac_fwd, _pim_mac_bwd)
+
+
+def pim_mac(a: jnp.ndarray, b: jnp.ndarray, acc: jnp.ndarray,
+            *, block: int = 1024, interpret: bool = True) -> jnp.ndarray:
+    """Elementwise acc + a*b, tiled along the last dim. Differentiable
+    (custom VJP; cotangents are pim_mac calls)."""
+    assert a.shape == b.shape == acc.shape
+    return _pim_mac_vjp(a, b, acc, block, interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -84,11 +118,8 @@ def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
-def pim_matmul(a: jnp.ndarray, b: jnp.ndarray, *, bm: int = 128,
-               bn: int = 128, bk: int = 128,
-               interpret: bool = True) -> jnp.ndarray:
-    """f32 C = A @ B with (bm, bn, bk) VMEM tiles (MXU-aligned on TPU)."""
+def _matmul_call(a, b, bm: int, bn: int, bk: int,
+                 interpret: bool) -> jnp.ndarray:
     m, k = a.shape
     k2, n = b.shape
     assert k == k2
@@ -108,3 +139,34 @@ def pim_matmul(a: jnp.ndarray, b: jnp.ndarray, *, bm: int = 128,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _pim_matmul_vjp(a, b, bm, bn, bk, interpret):
+    return _matmul_call(a, b, bm, bn, bk, interpret)
+
+
+def _pim_matmul_fwd(a, b, bm, bn, bk, interpret):
+    return _matmul_call(a, b, bm, bn, bk, interpret), (a, b)
+
+
+def _pim_matmul_bwd(bm, bn, bk, interpret, res, g):
+    # dA = g @ B^T and dB = A^T @ g: both stay in the array as blocked
+    # matmuls. Tile-size bookkeeping: g is (m, n), so the grids below need
+    # (bm, bk, bn) resp. (bk, bn, bm) to keep every axis divisible.
+    a, b = res
+    da = _pim_matmul_vjp(g, b.T, bm, bk, bn, interpret)
+    db = _pim_matmul_vjp(a.T, g, bk, bn, bm, interpret)
+    return da.astype(a.dtype), db.astype(b.dtype)
+
+
+_pim_matmul_vjp.defvjp(_pim_matmul_fwd, _pim_matmul_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def pim_matmul(a: jnp.ndarray, b: jnp.ndarray, *, bm: int = 128,
+               bn: int = 128, bk: int = 128,
+               interpret: bool = True) -> jnp.ndarray:
+    """f32 C = A @ B with (bm, bn, bk) VMEM tiles (MXU-aligned on TPU).
+    Differentiable (custom VJP; both cotangents are pim_matmul calls)."""
+    return _pim_matmul_vjp(a, b, bm, bn, bk, interpret)

@@ -5,14 +5,21 @@ hierarchy of the paper's SOT-MRAM PIM arrays:
 
     jaxpr --(graph)--> operator graph --(placement)--> weight-stationary
     subarray blocks --(schedule)--> cost-rolled static pipeline
-    --(executor)--> numerical execution with the Pallas PIM kernels.
+    --(executor | compile)--> numerical execution with the Pallas PIM
+    kernels: eager per-equation interpretation (the oracle) or one
+    jittable, differentiable compiled program (the execution substrate
+    behind ``Trainer(backend="pim")`` / ``ServeEngine(backend="pim")``).
 
 The aggregate estimator (``repro.core.estimator``) remains the ideal
 zero-stall bound; ``Schedule.reconcile()`` proves each schedule against it.
 """
 
-from repro.mapper.api import map_arch, map_lenet
+from repro.mapper.api import (abstract_like, compile_arch, compile_lenet,
+                              map_arch, map_lenet)
+from repro.mapper.compile import (CompiledProgram, clear_program_cache,
+                                  compile_schedule, program_cache_stats)
 from repro.mapper.executor import ScheduleExecutor, run_schedule
+from repro.mapper.lowering import LoweringContext, eval_placed
 from repro.mapper.graph import (ConvNode, EltwiseNode, MatmulNode, OpGraph,
                                 OpNode, build_graph)
 from repro.mapper.hardware import (ChipSpec, PIMHierarchy, SubarraySpec,
@@ -24,10 +31,13 @@ from repro.mapper.schedule import (Schedule, ScheduleReport, StageCost,
                                    build_schedule, build_schedule_from_graph)
 
 __all__ = [
-    "ChipSpec", "ConvNode", "EltwiseNode", "MatmulNode", "NodePlacement",
-    "OpGraph", "OpNode", "PIMHierarchy", "PlacedBlock", "Placement",
-    "PlacementPolicy", "Schedule", "ScheduleExecutor", "ScheduleReport",
-    "StageCost", "SubarraySpec", "TileSpec", "build_graph", "build_schedule",
-    "build_schedule_from_graph", "default_hierarchy", "make_subarray",
-    "map_arch", "map_lenet", "place", "run_schedule",
+    "ChipSpec", "CompiledProgram", "ConvNode", "EltwiseNode", "abstract_like",
+    "LoweringContext", "MatmulNode", "NodePlacement", "OpGraph", "OpNode",
+    "PIMHierarchy", "PlacedBlock", "Placement", "PlacementPolicy",
+    "Schedule", "ScheduleExecutor", "ScheduleReport", "StageCost",
+    "SubarraySpec", "TileSpec", "build_graph", "build_schedule",
+    "build_schedule_from_graph", "clear_program_cache", "compile_arch",
+    "compile_lenet", "compile_schedule", "default_hierarchy", "eval_placed",
+    "make_subarray", "map_arch", "map_lenet", "place",
+    "program_cache_stats", "run_schedule",
 ]

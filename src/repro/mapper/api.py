@@ -6,6 +6,13 @@ full 32B configs map fine on a laptop) and compiles it into a placed,
 cost-rolled static schedule. ``map_lenet`` does the same for the paper's
 own benchmark network, whose schedule is small enough to *execute*
 numerically with ``repro.mapper.executor``.
+
+``compile_arch`` / ``compile_lenet`` go one step further: schedule ->
+:func:`repro.mapper.compile.compile_schedule` -> a jittable,
+differentiable ``CompiledProgram`` running the step *through the
+placement* (smoke configs recommended for archs you intend to actually
+call — the full 32B programs trace, but allocating their params is on
+you).
 """
 
 from __future__ import annotations
@@ -15,14 +22,20 @@ import jax.numpy as jnp
 
 from repro import configs
 from repro.configs.base import ShapeSpec
+from repro.mapper import compile as compile_mod
 from repro.mapper import placement as placement_mod
 from repro.mapper import schedule as schedule_mod
 from repro.mapper.hardware import PIMHierarchy
 
 
-def _abstract(tree):
+def abstract_like(tree):
+    """ShapeDtypeStruct stand-ins for a pytree of arrays — the 'trace
+    without allocating' idiom used throughout the mapper."""
     return jax.tree.map(
         lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+_abstract = abstract_like
 
 
 def map_arch(name: str, kind: str = "train", *, seq_len: int = 128,
@@ -91,3 +104,28 @@ def map_lenet(kind: str = "serve", *, batch: int = 4, lr: float = 0.05,
             train_step, _abstract(params), images, labels,
             hierarchy=hierarchy, policy=policy, tech=tech)
     raise ValueError(f"kind must be 'train' or 'serve', got {kind!r}")
+
+
+def compile_arch(name: str, kind: str = "train", *, seq_len: int = 128,
+                 batch: int = 1, smoke: bool = False,
+                 hierarchy: PIMHierarchy | None = None,
+                 policy: placement_mod.PlacementPolicy | None = None,
+                 tech: str = "proposed", block: int = 128,
+                 interpret: bool = True) -> compile_mod.CompiledProgram:
+    """Map one architecture's step and compile it to a jittable program."""
+    sched = map_arch(name, kind, seq_len=seq_len, batch=batch, smoke=smoke,
+                     hierarchy=hierarchy, policy=policy, tech=tech)
+    return compile_mod.compile_schedule(sched, block=block,
+                                        interpret=interpret)
+
+
+def compile_lenet(kind: str = "serve", *, batch: int = 4, lr: float = 0.05,
+                  hierarchy: PIMHierarchy | None = None,
+                  policy: placement_mod.PlacementPolicy | None = None,
+                  tech: str = "proposed", block: int = 128,
+                  interpret: bool = True) -> compile_mod.CompiledProgram:
+    """Map the paper's LeNet and compile it to a jittable program."""
+    sched = map_lenet(kind, batch=batch, lr=lr, hierarchy=hierarchy,
+                      policy=policy, tech=tech)
+    return compile_mod.compile_schedule(sched, block=block,
+                                        interpret=interpret)

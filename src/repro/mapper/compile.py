@@ -1,0 +1,178 @@
+"""Compile a placed schedule into one jittable, differentiable function.
+
+The mapper's interpreter (``repro.mapper.executor``) re-walks the jaxpr
+equation by equation on every call — eager dispatch that cannot be jitted
+or differentiated, which made the mapper a cost abacus rather than an
+execution substrate. This module runs the *same* walk, with the *same*
+lowering-rule table (``repro.mapper.lowering``), exactly once at trace
+time: every placed matmul / im2col conv / eltwise equation is rewritten
+into its blocked ``pim_matmul`` / ``pim_mac`` form while JAX traces, and
+what comes out is one ordinary JAX function —
+
+    prog = compile_schedule(schedule)     # CompiledProgram, callable
+    prog(*args)                           # jitted, zero retrace after 1st
+    jax.grad(prog.fn)(*args)              # differentiates through the
+                                          # kernels' custom VJPs
+
+so ``Trainer(backend="pim")`` and ``ServeEngine(backend="pim")`` can run
+their steps *through the placement* instead of plain ``jax.jit``.
+
+Programs are cached by ``(fn, input avals, placement signature, kernel
+knobs)``: compiling the same schedule twice returns the identical
+``CompiledProgram`` object, whose ``jax.jit`` cache is already warm —
+repeated steps pay zero retrace (asserted via ``trace_count``).
+
+The interpreter remains the oracle: ``CompiledProgram.verify`` checks the
+program against both the eager interpreter and ``jax.jit(fn)``.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.mapper.lowering import LoweringContext, eval_placed
+from repro.mapper.schedule import Schedule
+
+
+@dataclasses.dataclass
+class CompiledProgram:
+    """One schedule lowered to a jittable, differentiable function.
+
+    ``fn`` is the raw traced-replay function (use it under ``jax.grad`` /
+    ``jax.vmap`` / your own ``jax.jit``); calling the program invokes the
+    pre-jitted version. ``trace_count`` increments each time ``fn``'s body
+    runs on tracers (a jit trace/retrace, a grad trace, ...) — calling the
+    program with the same avals after warmup must leave it put. Eager
+    calls of ``fn`` on concrete arrays are not traces and do not count.
+    """
+
+    schedule: Schedule
+    fn: Callable
+    jitted: Callable
+    ctx: LoweringContext
+    trace_count: int = 0
+
+    def __call__(self, *args, **kwargs):
+        return self.jitted(*args, **kwargs)
+
+    @property
+    def placed_calls(self) -> int:
+        """pim_matmul calls baked into the program (totalled over traces)."""
+        return self.ctx.placed_calls
+
+    @property
+    def eltwise_calls(self) -> int:
+        return self.ctx.eltwise_calls
+
+    def verify(self, *args, rtol: float = 1e-4, atol: float = 1e-4,
+               **kwargs) -> float:
+        """Check the compiled program against both oracles — the eager
+        interpreter and ``jax.jit`` of the original fn. Returns the max
+        abs deviation vs ``jax.jit(fn)``."""
+        from repro.mapper.executor import ScheduleExecutor
+
+        got = self.jitted(*args, **kwargs)
+        interp = ScheduleExecutor(self.schedule, interpret=self.ctx.interpret,
+                                  block=self.ctx.block).run(*args, **kwargs)
+        for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(interp)):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       rtol=rtol, atol=atol)
+        worst = 0.0
+        fn = self.schedule.graph.fn
+        if fn is not None:
+            want = jax.jit(fn)(*args, **kwargs)
+            for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+                g, w = np.asarray(g), np.asarray(w)
+                np.testing.assert_allclose(g, w, rtol=rtol, atol=atol)
+                if g.size:
+                    worst = max(worst, float(np.max(np.abs(g - w))))
+        return worst
+
+
+# ---------------------------------------------------------------------------
+# program cache
+# ---------------------------------------------------------------------------
+
+# LRU-bounded: fn identity is part of the key, so per-call closures (e.g.
+# compile_arch's fresh step functions) can never hit — without eviction
+# they would pin their schedules and consts forever.
+_CACHE: "collections.OrderedDict[tuple, CompiledProgram]" = \
+    collections.OrderedDict()
+_CACHE_MAX = 32
+_STATS = {"hits": 0, "misses": 0}
+
+
+def _program_key(schedule: Schedule, block: int, interpret: bool) -> tuple:
+    closed = schedule.graph.closed_jaxpr
+    avals = tuple((tuple(v.aval.shape), str(v.aval.dtype))
+                  for v in closed.jaxpr.invars)
+    fn = schedule.graph.fn
+    fn_key: Any = fn if fn is not None else id(closed)
+    return (fn_key, avals, schedule.placement.signature(),
+            schedule.hierarchy.tech, block, interpret)
+
+
+def program_cache_stats() -> dict[str, int]:
+    return {"hits": _STATS["hits"], "misses": _STATS["misses"],
+            "size": len(_CACHE)}
+
+
+def clear_program_cache() -> None:
+    _CACHE.clear()
+    _STATS["hits"] = _STATS["misses"] = 0
+
+
+# ---------------------------------------------------------------------------
+# the compiler
+# ---------------------------------------------------------------------------
+
+
+def compile_schedule(schedule: Schedule, *, block: int = 128,
+                     interpret: bool = True,
+                     use_cache: bool = True) -> CompiledProgram:
+    """Lower ``schedule`` into one jittable, differentiable function.
+
+    The returned :class:`CompiledProgram` is callable with exactly the
+    arguments the schedule's fn was traced with (pytrees welcome). The
+    first call traces once — the Python jaxpr walk runs under the trace
+    and bakes every placed node's blocked kernel calls into a single XLA
+    program; subsequent same-shape calls replay the compiled executable.
+    """
+    if use_cache:
+        key = _program_key(schedule, block, interpret)
+        hit = _CACHE.get(key)
+        if hit is not None:
+            _STATS["hits"] += 1
+            _CACHE.move_to_end(key)
+            return hit
+        _STATS["misses"] += 1
+
+    ctx = LoweringContext(schedule, block=block, interpret=interpret)
+    closed = schedule.graph.closed_jaxpr
+    in_tree = schedule.graph.in_tree
+    out_tree = schedule.graph.out_tree
+    holder: list[CompiledProgram] = []
+
+    def fn(*args, **kwargs):
+        flat, tree = jax.tree.flatten((args, kwargs))
+        if holder and any(isinstance(x, jax.core.Tracer) for x in flat):
+            holder[0].trace_count += 1
+        if in_tree is not None and tree != in_tree:
+            raise TypeError(f"argument structure {tree} != traced "
+                            f"structure {in_tree}")
+        outs = eval_placed(ctx, closed.jaxpr, closed.consts, flat)
+        return jax.tree.unflatten(out_tree, outs) if out_tree else outs
+
+    program = CompiledProgram(schedule=schedule, fn=fn, jitted=jax.jit(fn),
+                              ctx=ctx)
+    holder.append(program)
+    if use_cache:
+        _CACHE[key] = program
+        while len(_CACHE) > _CACHE_MAX:
+            _CACHE.popitem(last=False)
+    return program

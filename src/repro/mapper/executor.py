@@ -1,6 +1,7 @@
 """Numerical executor: run a static schedule with the real Pallas kernels.
 
-Interprets the schedule's jaxpr equation by equation. Placed matmul nodes
+Interprets the schedule's jaxpr equation by equation through the shared
+lowering-rule table (``repro.mapper.lowering``). Placed matmul nodes
 execute as one ``pim_matmul`` call *per placed weight block* (partial
 products accumulated across k-blocks — the block structure of the placement
 drives the compute, so the schedule is real, not just an abacus); simple
@@ -10,11 +11,11 @@ reshapes, nonlinearities, control flow) falls back to the primitive's bind,
 so any traceable fn executes and the output must match ``jax.jit(fn)`` to
 fp32 tolerance.
 
-Fallback cases (still numerically exact, just not routed through the PIM
-kernels): batched/multi-contraction dot_generals, grouped/dilated/
-negative-padding convs, non-NHWC conv layouts, div (a*(1/b) would diverge
-from lax.div at the overflow edge), and placed ops inside scan/while
-bodies.
+This eager per-equation walk is the **debugging/verification mode** — and
+the oracle the compiled path (``repro.mapper.compile``) must match
+bit-for-fp32, since both paths evaluate the identical rule table; the
+compiler just runs the walk once at trace time under ``jax.jit``.
+
 ``placed_calls`` / ``eltwise_calls`` count the kernel-routed executions so
 tests can assert the PIM path actually ran.
 """
@@ -22,23 +23,12 @@ tests can assert the PIM path actually ran.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.estimator import CALL_PRIMS, inner_jaxpr
-from repro.kernels.pim_mac import pim_mac, pim_matmul
+from repro.mapper.lowering import LoweringContext, eval_placed
 from repro.mapper.schedule import Schedule
-
-
-def _pad_to(x: jnp.ndarray, mults: tuple[int, int]) -> jnp.ndarray:
-    pr = (-x.shape[0]) % mults[0]
-    pc = (-x.shape[1]) % mults[1]
-    if pr or pc:
-        x = jnp.pad(x, ((0, pr), (0, pc)))
-    return x
 
 
 @dataclasses.dataclass
@@ -48,11 +38,19 @@ class ScheduleExecutor:
     schedule: Schedule
     interpret: bool = True
     block: int = 128              # pallas tile edge (pad-to multiple)
-    placed_calls: int = 0
-    eltwise_calls: int = 0
 
     def __post_init__(self):
-        self._node_by_eqn = {nd.eqn_id: nd for nd in self.schedule.graph.nodes}
+        self._ctx = LoweringContext(self.schedule, block=self.block,
+                                    interpret=self.interpret)
+
+    # kernel-routed call counters live on the shared lowering context
+    @property
+    def placed_calls(self) -> int:
+        return self._ctx.placed_calls
+
+    @property
+    def eltwise_calls(self) -> int:
+        return self._ctx.eltwise_calls
 
     # -- public API ---------------------------------------------------------
 
@@ -64,7 +62,7 @@ class ScheduleExecutor:
             raise TypeError(
                 f"argument structure {in_tree} != traced structure "
                 f"{self.schedule.graph.in_tree}")
-        outs = self._eval(closed.jaxpr, closed.consts, flat)
+        outs = eval_placed(self._ctx, closed.jaxpr, closed.consts, flat)
         out_tree = self.schedule.graph.out_tree
         return jax.tree.unflatten(out_tree, outs) if out_tree else outs
 
@@ -83,141 +81,6 @@ class ScheduleExecutor:
             if g.size:
                 worst = max(worst, float(np.max(np.abs(g - w))))
         return worst
-
-    # -- jaxpr interpreter --------------------------------------------------
-
-    def _eval(self, jaxpr, consts, args) -> list[Any]:
-        env: dict[Any, Any] = {}
-
-        def read(v):
-            return v.val if isinstance(v, jax.core.Literal) else env[v]
-
-        def write(v, x):
-            env[v] = x
-
-        jax.util.safe_map(write, jaxpr.constvars, consts)
-        jax.util.safe_map(write, jaxpr.invars, args)
-        for eqn in jaxpr.eqns:
-            invals = [read(v) for v in eqn.invars]
-            name = eqn.primitive.name
-            node = self._node_by_eqn.get(id(eqn))
-            outs = None
-            if name in CALL_PRIMS:
-                inner = inner_jaxpr(eqn)
-                if inner is not None and hasattr(inner, "jaxpr"):
-                    outs = self._eval(inner.jaxpr, inner.consts, invals)
-                elif inner is not None and not inner.constvars:
-                    # remat2/checkpoint carry a raw (const-free) Jaxpr;
-                    # iter_eqns inlines it, so we must too or placed nodes
-                    # inside jax.checkpoint would silently bind
-                    outs = self._eval(inner, [], invals)
-            if outs is None and node is not None and node.kind == "matmul":
-                outs = self._try_placed_dot(eqn, node, invals)
-            if outs is None and node is not None and node.kind == "conv":
-                outs = self._try_placed_conv(eqn, node, invals)
-            if outs is None and node is not None and node.kind == "eltwise":
-                outs = self._try_pim_eltwise(node.op, invals, eqn)
-            if outs is None:
-                subfuns, bind_params = eqn.primitive.get_bind_params(
-                    eqn.params)
-                ans = eqn.primitive.bind(*subfuns, *invals, **bind_params)
-                outs = list(ans) if eqn.primitive.multiple_results else [ans]
-            jax.util.safe_map(write, eqn.outvars, outs)
-        return [read(v) for v in jaxpr.outvars]
-
-    # -- placed matmul ------------------------------------------------------
-
-    def _blocked_matmul(self, node_idx: int, a2: jnp.ndarray,
-                        b2: jnp.ndarray) -> jnp.ndarray:
-        """A (m,k) @ B (k,n) as one pim_matmul per placed block of B,
-        accumulating partial products across row (k) blocks — replica 0;
-        replicas are throughput copies holding identical weights."""
-        np_ = self.schedule.placement.node_placements[node_idx]
-        m, _ = a2.shape
-        _, n = b2.shape
-        out = jnp.zeros((m, n), jnp.float32)
-        for blk in np_.iter_blocks(self.schedule.hierarchy, replica=0):
-            pa = _pad_to(a2[:, blk.row0:blk.row0 + blk.n_rows],
-                         (self.block, self.block))
-            pb = _pad_to(b2[blk.row0:blk.row0 + blk.n_rows,
-                            blk.col0:blk.col0 + blk.n_cols],
-                         (self.block, self.block))
-            part = pim_matmul(pa.astype(jnp.float32), pb.astype(jnp.float32),
-                              bm=self.block, bn=self.block, bk=self.block,
-                              interpret=self.interpret)
-            out = out.at[:, blk.col0:blk.col0 + blk.n_cols].add(
-                part[:m, :blk.n_cols])
-            self.placed_calls += 1
-        return out
-
-    def _try_placed_dot(self, eqn, node, invals):
-        lhs, rhs = invals
-        if not jnp.issubdtype(eqn.outvars[0].aval.dtype, jnp.floating):
-            return None              # int matmuls would round past 2^24
-        (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
-        if lb or rb or len(lc) != 1 or lhs.ndim != 2 or rhs.ndim != 2:
-            return None
-        a2 = lhs if lc[0] == 1 else lhs.T
-        b2 = rhs if rc[0] == 0 else rhs.T
-        out = self._blocked_matmul(node.idx, a2, b2)
-        return [out.astype(eqn.outvars[0].aval.dtype)]
-
-    # -- placed conv (im2col) -----------------------------------------------
-
-    def _try_placed_conv(self, eqn, node, invals):
-        x, w = invals
-        if not jnp.issubdtype(eqn.outvars[0].aval.dtype, jnp.floating):
-            return None
-        p = eqn.params
-        dn = p["dimension_numbers"]
-        if (dn.lhs_spec != (0, 3, 1, 2) or dn.rhs_spec != (3, 2, 0, 1)
-                or dn.out_spec != (0, 3, 1, 2)):
-            return None              # only NHWC / HWIO / NHWC
-        if (p.get("feature_group_count", 1) != 1
-                or p.get("batch_group_count", 1) != 1
-                or any(d != 1 for d in p["lhs_dilation"])
-                or any(d != 1 for d in p["rhs_dilation"])
-                or any(pad < 0 for pair in p["padding"] for pad in pair)):
-            return None              # negative padding: numeric fallback
-        kh, kw, cin, cout = w.shape
-        sh, sw = p["window_strides"]
-        (pt, pb_), (pl, pr) = p["padding"]
-        xp = jnp.pad(x, ((0, 0), (pt, pb_), (pl, pr), (0, 0)))
-        n, hh, ww, _ = xp.shape
-        oh = (hh - kh) // sh + 1
-        ow = (ww - kw) // sw + 1
-        # im2col: patch layout (kh, kw, cin) matches HWIO.reshape(-1, cout)
-        cols = [xp[:, i:i + oh * sh:sh, j:j + ow * sw:sw, :]
-                for i in range(kh) for j in range(kw)]
-        a2 = jnp.concatenate(cols, axis=-1).reshape(n * oh * ow, kh * kw * cin)
-        b2 = w.reshape(kh * kw * cin, cout)
-        out = self._blocked_matmul(node.idx, a2, b2)
-        out = out.reshape(n, oh, ow, cout)
-        return [out.astype(eqn.outvars[0].aval.dtype)]
-
-    # -- pim eltwise --------------------------------------------------------
-
-    def _try_pim_eltwise(self, op: str, invals, eqn):
-        a, b = invals
-        aval = eqn.outvars[0].aval
-        if not jnp.issubdtype(aval.dtype, jnp.floating) or not aval.size:
-            return None
-        # lax eltwise prims broadcast size-1 dims; resolve before pim_mac
-        a = jnp.broadcast_to(jnp.asarray(a, aval.dtype), aval.shape)
-        b = jnp.broadcast_to(jnp.asarray(b, aval.dtype), aval.shape)
-        one = jnp.ones_like(a)
-        if op == "add":        # b + a*1
-            out = pim_mac(a, one, b, interpret=self.interpret)
-        elif op == "sub":      # a + b*(-1)
-            out = pim_mac(b, -one, a, interpret=self.interpret)
-        elif op == "mul":      # 0 + a*b
-            out = pim_mac(a, b, jnp.zeros_like(a), interpret=self.interpret)
-        else:
-            # div as a*(1/b) diverges from lax.div when 1/b overflows or
-            # rounds; keep the jit-match contract via the numeric fallback
-            return None
-        self.eltwise_calls += 1
-        return [out.astype(aval.dtype)]
 
 
 def run_schedule(schedule: Schedule, *args, interpret: bool = True, **kwargs):

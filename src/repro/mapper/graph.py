@@ -136,21 +136,22 @@ def build_graph_from_jaxpr(closed_jaxpr, in_tree=None, out_tree=None,
         node: OpNode | None = None
         idx = len(nodes)
         out_shape = tuple(eqn.outvars[0].aval.shape)
-        if name == "dot_general":
+        kind = estimator.node_kind(name)
+        if kind == "matmul":
             b, m, n, k = estimator.dot_general_dims(eqn)
             node = MatmulNode(
                 idx=idx, kind="matmul", name=f"dot_general.{idx}",
                 repeat=scale, deps=sorted(src), out_shape=out_shape,
                 out_elems=_out_elems(eqn), macs=scale * b * m * n * k,
                 eqn_id=id(eqn), batch=b, m=m, k=k, n=n)
-        elif name == "conv_general_dilated":
+        elif kind == "conv":
             out_elems, fan_in, cout = estimator.conv_dims(eqn)
             node = ConvNode(
                 idx=idx, kind="conv", name=f"conv.{idx}",
                 repeat=scale, deps=sorted(src), out_shape=out_shape,
                 out_elems=out_elems, macs=scale * out_elems * fan_in,
                 eqn_id=id(eqn), fan_in=fan_in, cout=cout)
-        elif name in estimator.ADD_PRIMS or name in estimator.MUL_PRIMS:
+        elif kind == "eltwise":
             n_el = _out_elems(eqn)
             is_add = name in estimator.ADD_PRIMS
             node = EltwiseNode(

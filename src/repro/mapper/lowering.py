@@ -1,0 +1,262 @@
+"""The one lowering-rule table: placed jaxpr equations -> PIM kernel calls.
+
+Both execution modes of a :class:`~repro.mapper.schedule.Schedule` share
+this module, so the matmul/conv/eltwise lowering logic exists exactly once:
+
+  * the **interpreter** (``repro.mapper.executor``) calls
+    :func:`eval_placed` with concrete arrays — eager per-equation dispatch,
+    the debugging/verification mode and the oracle;
+  * the **compiler** (``repro.mapper.compile``) calls the same
+    :func:`eval_placed` with tracers under ``jax.jit`` — the Python walk
+    runs once at trace time and the placed rewrites are baked into a
+    single XLA program.
+
+Rules are keyed by the node kind from ``repro.core.estimator.NODE_KINDS``
+(the shared registry); a rule returns the lowered outputs or ``None`` to
+decline, in which case the equation falls back to ``primitive.bind`` —
+numerically exact, just not routed through the PIM kernels.
+
+Fallback cases: batched/multi-contraction dot_generals, grouped/dilated/
+negative-padding convs, non-NHWC conv layouts, div (a*(1/b) would diverge
+from lax.div at the overflow edge), integer matmuls (would round past
+2^24), and placed ops inside scan/while bodies. Call-like primitives
+(pjit, remat, custom_vjp, ...) are inlined only when placed nodes live
+inside them; otherwise they are bound as-is, which preserves the
+caller's custom differentiation rules under ``jax.grad`` of a compiled
+program.
+
+Caveat of that inlining: when a ``custom_vjp`` body *does* contain placed
+nodes, differentiating the compiled program autodiffs the inlined primal
+(through the PIM kernels' own VJPs) instead of invoking the registered
+backward — correct only when that backward is mathematically the
+gradient of the primal, which holds for this repo's custom VJPs
+(recompute-for-memory patterns) but not for e.g. straight-through
+estimators. Likewise an inlined ``jax.checkpoint`` body loses its
+rematerialization (a memory property, not a numerics one). The grad
+tests in tests/test_compile.py pin the supported surface.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import estimator
+from repro.core.estimator import CALL_PRIMS, inner_jaxpr
+from repro.kernels.pim_mac import pim_mac, pim_matmul
+
+
+def _pad_to(x: jnp.ndarray, mults: tuple[int, int]) -> jnp.ndarray:
+    pr = (-x.shape[0]) % mults[0]
+    pc = (-x.shape[1]) % mults[1]
+    if pr or pc:
+        x = jnp.pad(x, ((0, pr), (0, pc)))
+    return x
+
+
+@dataclasses.dataclass
+class LoweringContext:
+    """Schedule + kernel knobs + call counters, threaded through the rules.
+
+    ``placed_calls`` / ``eltwise_calls`` count kernel-routed executions.
+    Under the interpreter they count per run; under the compiler they
+    count per *trace* (the kernel calls baked into the program).
+    """
+
+    schedule: Any                 # repro.mapper.schedule.Schedule
+    block: int = 128              # pallas tile edge (pad-to multiple)
+    interpret: bool = True
+    placed_calls: int = 0
+    eltwise_calls: int = 0
+
+    def __post_init__(self):
+        self.node_by_eqn = {nd.eqn_id: nd
+                            for nd in self.schedule.graph.nodes}
+        self._subtree_cache: dict[int, bool] = {}
+
+    def subtree_has_placed(self, jaxpr) -> bool:
+        """True if any equation reachable from ``jaxpr`` is a graph node."""
+        key = id(jaxpr)
+        if key not in self._subtree_cache:
+            self._subtree_cache[key] = any(
+                id(eqn) in self.node_by_eqn
+                for eqn, _ in estimator.iter_eqns(jaxpr))
+        return self._subtree_cache[key]
+
+
+# ---------------------------------------------------------------------------
+# placed matmul (shared by the dot_general and conv rules)
+# ---------------------------------------------------------------------------
+
+
+def blocked_matmul(ctx: LoweringContext, node_idx: int, a2: jnp.ndarray,
+                   b2: jnp.ndarray) -> jnp.ndarray:
+    """A (m,k) @ B (k,n) as one pim_matmul per placed block of B,
+    accumulating partial products across row (k) blocks — replica 0;
+    replicas are throughput copies holding identical weights."""
+    np_ = ctx.schedule.placement.node_placements[node_idx]
+    m, _ = a2.shape
+    _, n = b2.shape
+    out = jnp.zeros((m, n), jnp.float32)
+    for blk in np_.iter_blocks(ctx.schedule.hierarchy, replica=0):
+        pa = _pad_to(a2[:, blk.row0:blk.row0 + blk.n_rows],
+                     (ctx.block, ctx.block))
+        pb = _pad_to(b2[blk.row0:blk.row0 + blk.n_rows,
+                        blk.col0:blk.col0 + blk.n_cols],
+                     (ctx.block, ctx.block))
+        part = pim_matmul(pa.astype(jnp.float32), pb.astype(jnp.float32),
+                          bm=ctx.block, bn=ctx.block, bk=ctx.block,
+                          interpret=ctx.interpret)
+        out = out.at[:, blk.col0:blk.col0 + blk.n_cols].add(
+            part[:m, :blk.n_cols])
+        ctx.placed_calls += 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-kind rules
+# ---------------------------------------------------------------------------
+
+
+def lower_dot(ctx: LoweringContext, eqn, node, invals):
+    lhs, rhs = invals
+    aval = eqn.outvars[0].aval
+    if not jnp.issubdtype(aval.dtype, jnp.floating):
+        return None              # int matmuls would round past 2^24
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    if lb or rb or len(lc) != 1 or rhs.ndim != 2:
+        return None
+    if lhs.ndim == 2:
+        a2 = lhs if lc[0] == 1 else lhs.T
+    elif lc[0] == lhs.ndim - 1:
+        # x @ W with leading activation dims (the transformer case,
+        # (B, S, d) @ (d, n)): fold them into m — that is exactly how the
+        # placement sized this node's stationary (k, n) weight
+        a2 = lhs.reshape(-1, lhs.shape[-1])
+    else:
+        return None
+    b2 = rhs if rc[0] == 0 else rhs.T
+    out = blocked_matmul(ctx, node.idx, a2, b2)
+    return [out.reshape(aval.shape).astype(aval.dtype)]
+
+
+def lower_conv(ctx: LoweringContext, eqn, node, invals):
+    x, w = invals
+    if not jnp.issubdtype(eqn.outvars[0].aval.dtype, jnp.floating):
+        return None
+    p = eqn.params
+    dn = p["dimension_numbers"]
+    if (dn.lhs_spec != (0, 3, 1, 2) or dn.rhs_spec != (3, 2, 0, 1)
+            or dn.out_spec != (0, 3, 1, 2)):
+        return None              # only NHWC / HWIO / NHWC
+    if (p.get("feature_group_count", 1) != 1
+            or p.get("batch_group_count", 1) != 1
+            or any(d != 1 for d in p["lhs_dilation"])
+            or any(d != 1 for d in p["rhs_dilation"])
+            or any(pad < 0 for pair in p["padding"] for pad in pair)):
+        return None              # negative padding: numeric fallback
+    kh, kw, cin, cout = w.shape
+    sh, sw = p["window_strides"]
+    (pt, pb_), (pl, pr) = p["padding"]
+    xp = jnp.pad(x, ((0, 0), (pt, pb_), (pl, pr), (0, 0)))
+    n, hh, ww, _ = xp.shape
+    oh = (hh - kh) // sh + 1
+    ow = (ww - kw) // sw + 1
+    # im2col: patch layout (kh, kw, cin) matches HWIO.reshape(-1, cout)
+    cols = [xp[:, i:i + oh * sh:sh, j:j + ow * sw:sw, :]
+            for i in range(kh) for j in range(kw)]
+    a2 = jnp.concatenate(cols, axis=-1).reshape(n * oh * ow, kh * kw * cin)
+    b2 = w.reshape(kh * kw * cin, cout)
+    out = blocked_matmul(ctx, node.idx, a2, b2)
+    out = out.reshape(n, oh, ow, cout)
+    return [out.astype(eqn.outvars[0].aval.dtype)]
+
+
+def lower_eltwise(ctx: LoweringContext, eqn, node, invals):
+    if len(invals) != 2:
+        return None          # unary prims registered via register_node_kind
+    a, b = invals
+    aval = eqn.outvars[0].aval
+    if not jnp.issubdtype(aval.dtype, jnp.floating) or not aval.size:
+        return None
+    # lax eltwise prims broadcast size-1 dims; resolve before pim_mac
+    a = jnp.broadcast_to(jnp.asarray(a, aval.dtype), aval.shape)
+    b = jnp.broadcast_to(jnp.asarray(b, aval.dtype), aval.shape)
+    one = jnp.ones_like(a)
+    op = node.op
+    if op == "add":        # b + a*1
+        out = pim_mac(a, one, b, interpret=ctx.interpret)
+    elif op == "sub":      # a + b*(-1)
+        out = pim_mac(b, -one, a, interpret=ctx.interpret)
+    elif op == "mul":      # 0 + a*b
+        out = pim_mac(a, b, jnp.zeros_like(a), interpret=ctx.interpret)
+    else:
+        # div as a*(1/b) diverges from lax.div when 1/b overflows or
+        # rounds; keep the jit-match contract via the numeric fallback
+        return None
+    ctx.eltwise_calls += 1
+    return [out.astype(aval.dtype)]
+
+
+# keyed by the estimator registry's node kinds — one rule per kind
+RULES: dict[str, Callable] = {
+    "matmul": lower_dot,
+    "conv": lower_conv,
+    "eltwise": lower_eltwise,
+}
+
+assert set(RULES) == set(estimator.NODE_KINDS.values()), (
+    "lowering rules out of sync with estimator.NODE_KINDS")
+
+
+# ---------------------------------------------------------------------------
+# the shared evaluator (eager interpreter == trace-time compiler)
+# ---------------------------------------------------------------------------
+
+
+def eval_placed(ctx: LoweringContext, jaxpr, consts, args) -> list[Any]:
+    """Evaluate ``jaxpr`` with placed equations rewritten via RULES.
+
+    Works identically on concrete arrays (interpreter) and tracers
+    (compiler): the only difference is who calls it and when.
+    """
+    env: dict[Any, Any] = {}
+
+    def read(v):
+        return v.val if isinstance(v, jax.core.Literal) else env[v]
+
+    def write(v, x):
+        env[v] = x
+
+    jax.util.safe_map(write, jaxpr.constvars, consts)
+    jax.util.safe_map(write, jaxpr.invars, args)
+    for eqn in jaxpr.eqns:
+        invals = [read(v) for v in eqn.invars]
+        name = eqn.primitive.name
+        node = ctx.node_by_eqn.get(id(eqn))
+        outs = None
+        if name in CALL_PRIMS:
+            inner = inner_jaxpr(eqn)
+            if inner is not None and hasattr(inner, "jaxpr"):
+                # inline only when placed nodes live inside; binding the
+                # call otherwise preserves its custom differentiation rule
+                if ctx.subtree_has_placed(inner.jaxpr):
+                    outs = eval_placed(ctx, inner.jaxpr, inner.consts,
+                                       invals)
+            elif inner is not None and not inner.constvars:
+                # remat2/checkpoint carry a raw (const-free) Jaxpr;
+                # iter_eqns inlines it, so we must too or placed nodes
+                # inside jax.checkpoint would silently bind
+                if ctx.subtree_has_placed(inner):
+                    outs = eval_placed(ctx, inner, [], invals)
+        if outs is None and node is not None:
+            outs = RULES[node.kind](ctx, eqn, node, invals)
+        if outs is None:
+            subfuns, bind_params = eqn.primitive.get_bind_params(eqn.params)
+            ans = eqn.primitive.bind(*subfuns, *invals, **bind_params)
+            outs = list(ans) if eqn.primitive.multiple_results else [ans]
+        jax.util.safe_map(write, eqn.outvars, outs)
+    return [read(v) for v in jaxpr.outvars]

@@ -132,6 +132,15 @@ class Placement:
         np_ = self.node_placements.get(node_idx)
         return np_.first_subarray if np_ is not None else None
 
+    def signature(self) -> tuple:
+        """Hashable identity of where every block lands — two placements
+        with equal signatures lower to identical compiled programs, so this
+        is the placement component of the program-cache key."""
+        return tuple(sorted(
+            (idx, np_.weight_rows, np_.weight_cols, np_.row_blocks,
+             np_.col_blocks, np_.replicas, np_.first_subarray, np_.shared)
+            for idx, np_ in self.node_placements.items()))
+
 
 def _replicas_for(node: OpNode, blocks: int, lanes_per_sub: int,
                   policy: PlacementPolicy) -> int:

@@ -1,0 +1,35 @@
+"""Version shims for the shard_map API.
+
+jax moved ``shard_map`` from ``jax.experimental.shard_map`` to the top
+level and renamed ``check_rep`` to ``check_vma`` along the way; this
+wrapper accepts the new spelling on both.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+try:                                    # jax >= 0.5
+    from jax import shard_map as _shard_map
+except ImportError:                     # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_CHECK_KW = ("check_vma" if "check_vma"
+             in inspect.signature(_shard_map).parameters else "check_rep")
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: check_vma})
+
+
+def pcast_varying(x, axis: str):
+    """Mark ``x`` device-varying along ``axis`` where vma typing exists
+    (jax >= 0.7 ``lax.pcast``); a no-op on older jax, which has no vma
+    type system to satisfy."""
+    import jax
+
+    pcast = getattr(jax.lax, "pcast", None)
+    if pcast is None:
+        return x
+    return pcast(x, (axis,), to="varying")

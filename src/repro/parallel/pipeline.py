@@ -27,8 +27,9 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.parallel._compat import pcast_varying, shard_map
 
 
 def pipeline_forward(x, stage_params, stage_fn: Callable, *, axis: str,
@@ -69,10 +70,8 @@ def pipeline_forward(x, stage_params, stage_fn: Callable, *, axis: str,
 
     # mark the carries as device-varying along the pipe axis (shard_map
     # vma typing: they hold per-stage values)
-    inflight0 = jax.lax.pcast(jnp.zeros(mb_shape, x.dtype), (axis,),
-                              to="varying")
-    outputs0 = jax.lax.pcast(jnp.zeros((n_micro,) + mb_shape, x.dtype),
-                             (axis,), to="varying")
+    inflight0 = pcast_varying(jnp.zeros(mb_shape, x.dtype), axis)
+    outputs0 = pcast_varying(jnp.zeros((n_micro,) + mb_shape, x.dtype), axis)
     (_, outputs), _ = jax.lax.scan(tick, (inflight0, outputs0),
                                    jnp.arange(n_ticks))
     # broadcast final outputs from the last stage to all stages so the

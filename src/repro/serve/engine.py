@@ -40,19 +40,44 @@ class Request:
 
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, *, batch: int = 4,
-                 max_len: int = 128, sample: Callable | None = None):
+                 max_len: int = 128, sample: Callable | None = None,
+                 backend: str = "jit", pim_tech: str = "proposed"):
+        """``backend="jit"`` jits the decode step; ``backend="pim"`` maps
+        it onto the PIM hierarchy and decodes through the compiled
+        schedule (``repro.mapper.compile``) — placed matmuls run as
+        blocked ``pim_matmul`` calls per resident weight block."""
         self.cfg = cfg
         self.model: DecoderLM = build_model(cfg)
         self.params = params
         self.batch = batch
         self.max_len = max_len
+        self.backend = backend
         self.cache = self.model.init_cache(batch, max_len)
         self.pos = np.zeros(batch, np.int32)        # per-slot next position
         self.slots: list[Request | None] = [None] * batch
         self.queue: deque[Request] = deque()
         self.sample = sample or (lambda logits: jnp.argmax(logits, -1))
-        self._decode = jax.jit(self._decode_impl)
+        self.pim_program = None
+        if backend == "jit":
+            self._decode = jax.jit(self._decode_impl)
+        elif backend == "pim":
+            from repro import mapper
+            sched = mapper.build_schedule(
+                self._decode_impl, mapper.abstract_like(params),
+                mapper.abstract_like(self.cache),
+                jax.ShapeDtypeStruct((batch,), jnp.int32),
+                jax.ShapeDtypeStruct((), jnp.int32), tech=pim_tech)
+            # use_cache=False: the cache keys on fn identity and this is
+            # a bound method — per-engine keys would never hit but would
+            # pin the engine (params, KV cache) in the global cache
+            self.pim_program = mapper.compile_schedule(sched,
+                                                       use_cache=False)
+            self._decode = self.pim_program
+        else:
+            raise ValueError(f"backend must be 'jit' or 'pim', "
+                             f"got {backend!r}")
         self.completed: list[Request] = []
+        self.starved: list[int] = []        # rids pending at last run() exit
 
     # one batched decode tick; per-slot positions via vmapped-by-slot step
     def _decode_impl(self, params, cache, tokens, pos):
@@ -76,17 +101,26 @@ class ServeEngine:
                                           jnp.int32(tick))
         return np.asarray(self.sample(logits), np.int32)
 
-    def run(self, max_ticks: int | None = None) -> list[Request]:
+    def run(self, max_ticks: int | None = None, *,
+            on_starvation: str = "raise") -> list[Request]:
         """Drive until queue + slots drain. Simple synchronous scheduler:
         all slots advance on a shared tick; a slot in 'prompt phase' feeds
         its next prompt token, a 'gen phase' slot feeds its last sampled
         token; finished slots recycle (their cache lane is overwritten by
-        the next request's prompt replay)."""
+        the next request's prompt replay).
+
+        The tick budget defaults to ``max_len - 1`` (the shared cache's
+        position bound). If it elapses with requests still pending, that
+        is starvation, not completion: ``on_starvation="raise"`` (default)
+        raises ``RuntimeError``; ``"return"`` records the pending request
+        ids in ``self.starved`` and returns what finished."""
+        if on_starvation not in ("raise", "return"):
+            raise ValueError(f"on_starvation must be 'raise' or 'return', "
+                             f"got {on_starvation!r}")
         self._admit()
         tick = 0
         prompt_idx = np.zeros(self.batch, np.int64)
         last_tok = np.zeros(self.batch, np.int32)
-        start_tick = np.zeros(self.batch, np.int64)
         max_ticks = max_ticks or (self.max_len - 1)
         while (any(s is not None for s in self.slots) or self.queue) \
                 and tick < max_ticks:
@@ -113,7 +147,13 @@ class ServeEngine:
                         self.completed.append(req)
                         self.slots[s] = None
                         prompt_idx[s] = 0
-                        start_tick[s] = tick + 1
             self._admit()
             tick += 1
+        self.starved = ([r.rid for r in self.slots if r is not None]
+                        + [r.rid for r in self.queue])
+        if self.starved and on_starvation == "raise":
+            raise RuntimeError(
+                f"serve loop exhausted max_ticks={max_ticks} with "
+                f"requests still pending (rids {self.starved}); raise "
+                f"max_ticks/max_len or pass on_starvation='return'")
         return self.completed

@@ -45,19 +45,47 @@ class Trainer:
     def __init__(self, cfg: TrainerConfig, *, train_step: Callable,
                  init_state: Callable[[], tuple[Any, Any]],
                  batch_fn: Callable[[int], Any],
-                 jit_kwargs: dict | None = None):
+                 jit_kwargs: dict | None = None,
+                 backend: str = "jit", pim_tech: str = "proposed"):
         """``train_step(params, opt_state, batch) -> (params, opt, loss)``;
         ``init_state()`` builds fresh (params, opt_state);
-        ``batch_fn(step)`` is the stateless data pipeline."""
+        ``batch_fn(step)`` is the stateless data pipeline.
+
+        ``backend="jit"`` runs the step under plain ``jax.jit``;
+        ``backend="pim"`` maps the full loss+grad step onto the PIM
+        hierarchy and runs the *compiled schedule* — every placed matmul
+        executes as blocked ``pim_matmul`` calls per resident weight
+        block (see ``repro.mapper.compile``). The placed schedule is
+        exposed as ``self.pim_program.schedule``."""
         self.cfg = cfg
         self.batch_fn = batch_fn
+        self.backend = backend
         self.ckpt = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep,
                                       async_save=cfg.async_ckpt)
         self.straggler = StragglerPolicy()
         self.heartbeat = HeartbeatMonitor()
-        self._step_fn = jax.jit(train_step, **(jit_kwargs or {}))
+        self.pim_program = None
 
         params, opt_state = init_state()
+        if backend == "jit":
+            self._step_fn = jax.jit(train_step, **(jit_kwargs or {}))
+        elif backend == "pim":
+            if jit_kwargs:
+                raise ValueError(
+                    "jit_kwargs only apply to backend='jit'; the pim "
+                    "backend jits the compiled schedule itself")
+            from repro import mapper
+            sched = mapper.build_schedule(train_step, params, opt_state,
+                                          batch_fn(0), tech=pim_tech)
+            # use_cache=False: the global program cache keys on fn
+            # identity, and this per-instance train_step closure would
+            # never hit but would be pinned (params and all) forever
+            self.pim_program = mapper.compile_schedule(sched,
+                                                       use_cache=False)
+            self._step_fn = self.pim_program
+        else:
+            raise ValueError(f"backend must be 'jit' or 'pim', "
+                             f"got {backend!r}")
         restored, step = self.ckpt.restore({"params": params,
                                             "opt": opt_state})
         if restored is not None:

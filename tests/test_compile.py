@@ -1,0 +1,219 @@
+"""Compiled PIM programs (ISSUE 2 acceptance contract).
+
+``compile_schedule`` must produce one jittable, differentiable function
+whose outputs match both the eager interpreter and ``jax.jit(fn)`` to
+fp32 tolerance; ``jax.grad`` through a compiled schedule must match
+``jax.grad(fn)``; the program cache must dedupe compiles and repeated
+calls must not retrace; Trainer/ServeEngine must run through the
+``backend="pim"`` path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs, mapper
+from repro.configs.lenet5 import CONFIG as LENET_CONFIG
+from repro.models import lenet
+from repro.models.transformer import build_model
+
+
+def _lenet_args(batch=4, seed=1):
+    params = lenet.init_lenet(jax.random.PRNGKey(0), LENET_CONFIG)
+    imgs = jax.random.normal(jax.random.PRNGKey(seed),
+                             (batch, 28, 28, 1), jnp.float32)
+    return params, imgs
+
+
+def _tree_close(got, want, rtol=1e-4, atol=1e-4):
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# compiled == interpreter == jax.jit(fn)
+# ---------------------------------------------------------------------------
+
+
+def test_compiled_lenet_matches_interpreter_and_jit():
+    sched = mapper.map_lenet("serve", batch=4)
+    prog = mapper.compile_schedule(sched, use_cache=False)
+    params, imgs = _lenet_args()
+    worst = prog.verify(params, imgs)       # interpreter + jit oracles
+    assert worst < 1e-4
+    # placed kernel calls were baked into the traced program
+    placed_blocks = sum(p.blocks_per_replica
+                       for p in sched.placement.node_placements.values())
+    assert prog.placed_calls == placed_blocks
+    assert prog.eltwise_calls > 0
+
+
+def test_compiled_llama_decode_matches_interpreter_and_jit():
+    cfg = configs.get_smoke_config("llama3-8b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cache = model.init_cache(2, 16)
+    tok = jnp.array([3, 5], jnp.int32)
+    pos = jnp.int32(0)
+
+    def decode(params, cache, tok, pos):
+        return model.decode_step(params, cache, tok, pos)
+
+    sched = mapper.build_schedule(decode, mapper.abstract_like(params),
+                                  mapper.abstract_like(cache), mapper.abstract_like(tok),
+                                  jax.ShapeDtypeStruct((), jnp.int32))
+    prog = mapper.compile_schedule(sched, use_cache=False)
+    got = prog(params, cache, tok, pos)
+    want = jax.jit(decode)(params, cache, tok, pos)
+    interp = mapper.ScheduleExecutor(sched).run(params, cache, tok, pos)
+    _tree_close(got, want)
+    _tree_close(got, interp)
+    assert prog.placed_calls > 0            # decode routed through the PIM
+
+
+# ---------------------------------------------------------------------------
+# differentiation
+# ---------------------------------------------------------------------------
+
+
+def test_grad_through_compiled_lenet_loss_matches():
+    params, imgs = _lenet_args()
+    labels = jnp.array([1, 7, 3, 9], jnp.int32)
+    sched = mapper.build_schedule(lenet.lenet_loss, mapper.abstract_like(params), imgs,
+                                  mapper.abstract_like(labels))
+    prog = mapper.compile_schedule(sched, use_cache=False)
+    got = jax.grad(prog.fn)(params, imgs, labels)
+    want = jax.grad(lenet.lenet_loss)(params, imgs, labels)
+    _tree_close(got, want)
+    # grad-of-jitted-program works too (the program is one ordinary fn)
+    got_jit = jax.jit(jax.grad(prog.fn))(params, imgs, labels)
+    _tree_close(got_jit, want)
+
+
+def test_grad_through_compiled_transformer_block_matches():
+    d, s, dff = 32, 16, 64
+    k = jax.random.split(jax.random.PRNGKey(0), 6)
+    p = {"wq": jax.random.normal(k[0], (d, d)) * 0.1,
+         "wk": jax.random.normal(k[1], (d, d)) * 0.1,
+         "wv": jax.random.normal(k[2], (d, d)) * 0.1,
+         "wo": jax.random.normal(k[3], (d, d)) * 0.1,
+         "w1": jax.random.normal(k[4], (d, dff)) * 0.1,
+         "w2": jax.random.normal(k[5], (dff, d)) * 0.1}
+    x = jax.random.normal(jax.random.PRNGKey(9), (s, d))
+
+    def block_loss(p, x):
+        q, kk, v = x @ p["wq"], x @ p["wk"], x @ p["wv"]
+        att = jax.nn.softmax(q @ kk.T / jnp.sqrt(d), axis=-1)
+        h = x + (att @ v) @ p["wo"]
+        m = jax.nn.gelu(h @ p["w1"]) @ p["w2"]
+        return jnp.mean((h + m) ** 2)
+
+    sched = mapper.build_schedule(block_loss, mapper.abstract_like(p), x)
+    prog = mapper.compile_schedule(sched, use_cache=False)
+    assert prog.verify(p, x) < 1e-4
+    got = jax.grad(prog.fn)(p, x)
+    want = jax.grad(block_loss)(p, x)
+    _tree_close(got, want)
+
+
+# ---------------------------------------------------------------------------
+# cache / retrace behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_program_cache_hits_and_zero_retrace():
+    mapper.clear_program_cache()
+    sched = mapper.map_lenet("serve", batch=4)
+    prog = mapper.compile_schedule(sched)
+    stats = mapper.program_cache_stats()
+    assert stats["misses"] == 1 and stats["size"] == 1
+
+    # compiling an equal schedule returns the *same* program object
+    prog2 = mapper.compile_schedule(mapper.map_lenet("serve", batch=4))
+    assert prog2 is prog
+    assert mapper.program_cache_stats()["hits"] == 1
+
+    params, imgs = _lenet_args()
+    prog(params, imgs)
+    assert prog.trace_count == 1
+    prog(params, imgs)                     # same avals: no retrace
+    prog(params, imgs + 1.0)
+    assert prog.trace_count == 1
+    prog.fn(params, imgs)                  # eager concrete call: not a trace
+    assert prog.trace_count == 1
+    mapper.clear_program_cache()
+
+
+def test_compiled_rejects_wrong_structure():
+    sched = mapper.map_lenet("serve", batch=4)
+    prog = mapper.compile_schedule(sched, use_cache=False)
+    params, imgs = _lenet_args()
+    with pytest.raises(TypeError):
+        prog(imgs, params)                 # swapped pytree structure
+
+
+# ---------------------------------------------------------------------------
+# trainer / serve integration
+# ---------------------------------------------------------------------------
+
+
+def test_trainer_pim_backend_trains_lenet(tmp_path):
+    from repro.data import DigitsDataset
+    from repro.optim import make_optimizer
+    from repro.train import Trainer, TrainerConfig
+
+    opt = make_optimizer("adamw", lr=2e-3)
+    ds = DigitsDataset(batch_size=32, seed=0)
+
+    def init_state():
+        p = lenet.init_lenet(jax.random.PRNGKey(0), LENET_CONFIG)
+        return p, opt.init(p)
+
+    def train_step(params, opt_state, batch):
+        imgs, labels = batch
+        loss, grads = jax.value_and_grad(lenet.lenet_loss)(
+            params, jnp.asarray(imgs), jnp.asarray(labels))
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    def make(sub, backend):
+        tc = TrainerConfig(total_steps=10, ckpt_every=50,
+                           ckpt_dir=str(tmp_path / sub), async_ckpt=False)
+        return Trainer(tc, train_step=train_step, init_state=init_state,
+                       batch_fn=ds.batch, backend=backend)
+
+    tr = make("pim", "pim")
+    res = tr.run()
+    assert tr.pim_program is not None
+    assert tr.pim_program.trace_count == 1       # 10 steps, one trace
+    assert tr.pim_program.placed_calls > 0
+    assert res["losses"][0] > res["losses"][-1]  # it learns
+    # the pim step IS the jit step, through the placement
+    res_jit = make("jit", "jit").run()
+    np.testing.assert_allclose(res["losses"], res_jit["losses"],
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_serve_engine_pim_backend_matches_jit():
+    from repro.serve import Request, ServeEngine
+
+    cfg = configs.get_smoke_config("llama3-8b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 3 + i, dtype=np.int32)
+               for i in range(3)]
+
+    def drive(backend):
+        eng = ServeEngine(cfg, params, batch=2, max_len=64, backend=backend)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_tokens=4))
+        return eng, {r.rid: r.out for r in eng.run()}
+
+    eng_jit, out_jit = drive("jit")
+    eng_pim, out_pim = drive("pim")
+    assert out_jit == out_pim
+    assert eng_pim.pim_program.placed_calls > 0
+    assert eng_pim.pim_program.trace_count == 1  # whole run, one trace

@@ -64,3 +64,26 @@ def test_batched_matches_single(setup):
         0, cfg.vocab_size, 5, dtype=np.int32), max_tokens=3))
     done = {r.rid: r for r in eng.run()}
     assert done[0].out == want
+
+
+def test_run_raises_on_starvation(setup):
+    """A tick budget too small for the queued work must not silently
+    return — starved requests are an error by default."""
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, batch=1, max_len=8)
+    eng.submit(Request(rid=7, prompt=np.arange(3, dtype=np.int32),
+                       max_tokens=50))
+    with pytest.raises(RuntimeError, match="pending"):
+        eng.run()
+    assert eng.starved == [7]
+
+
+def test_run_starvation_report_mode(setup):
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, batch=1, max_len=8)
+    eng.submit(Request(rid=1, prompt=np.arange(3, dtype=np.int32),
+                       max_tokens=50))
+    eng.submit(Request(rid=2, prompt=np.arange(4, dtype=np.int32),
+                       max_tokens=50))
+    done = eng.run(on_starvation="return")
+    assert done == [] and eng.starved == [1, 2]

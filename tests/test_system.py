@@ -39,10 +39,13 @@ def _lenet_setup(ckpt_dir, total, fail_at=None):
 
 
 def test_lenet_learns(tmp_path):
-    tr = _lenet_setup(tmp_path / "a", total=80)
+    tr = _lenet_setup(tmp_path / "a", total=150)
     res = tr.run()
-    assert res["losses"][0] > res["final_loss"]
-    assert res["final_loss"] < 1.6
+    # single-batch losses are noisy (the seed run sat right at the old
+    # <1.6 cliff at step 79 and bounced above it at 99); average the tail
+    tail = float(np.mean(res["losses"][-10:]))
+    assert res["losses"][0] > tail
+    assert tail < 1.5
 
 
 def test_resume_reproduces_uninterrupted_run(tmp_path):
@@ -161,8 +164,8 @@ def test_sharded_train_step_matches_single_device():
 
 _COMPRESSED_PSUM = r"""
 import jax, jax.numpy as jnp, numpy as np
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+from repro.parallel._compat import shard_map
 from repro.optim import compressed_psum
 
 mesh = jax.make_mesh((8,), ("data",))
