@@ -1,0 +1,136 @@
+"""Microbatch pipeline vs sequential schedule execution (beyond-paper).
+
+Times the partitioned pipeline plan two ways:
+
+  * **modeled** — ``Schedule.pipeline(M, K)`` steady-state timeline on the
+    paper's LeNet-5 train step (4 partitions) and a full llama3-8b decode
+    step (2 partitions: the scanned layer stack | final norm + logits).
+    The acceptance bar is a >= 1.5x pipelined-over-sequential speedup at
+    8 microbatches on the balanced workload (lenet5 train); the
+    scan-dominated llama cut is recorded unbarred with its steady-state
+    decode tokens/s (one uncuttable scan unit holds ~94% of the work, so
+    its headroom is structural, not a regression).
+  * **executed** — wall-clock steps/s of the real GPipe microbatch driver
+    (``repro.parallel.pipeline.run_partitioned``) vs the sequential
+    partitioned program on LeNet forward, proving the partition programs
+    actually stream (no bar: on one host the stages share the machine, so
+    this measures driver overhead, not pipeline parallelism).
+
+Emits CSV rows and writes ``BENCH_pipeline.json`` next to the repo root
+so the perf trajectory is recorded run over run.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+
+MICROBATCHES = 8
+SPEEDUP_BAR = 1.5
+
+_OUT = pathlib.Path(__file__).resolve().parent.parent / "BENCH_pipeline.json"
+
+
+def _timeline_entry(sched, microbatches: int, partitions: int) -> dict:
+    tl = sched.pipeline(microbatches, partitions=partitions)
+    return {
+        "partitions": tl.n_partitions,
+        "microbatches": tl.microbatches,
+        "interval_s": tl.interval_s,
+        "fill_s": tl.fill_s,
+        "makespan_s": tl.makespan_s,
+        "sequential_s": tl.sequential_s,
+        "speedup": tl.speedup,
+        "steady_sets_per_s": tl.steady_sets_per_s,
+        "bottleneck": tl.bottleneck,
+    }
+
+
+def _executed_entry(microbatches: int) -> dict:
+    from repro import mapper
+    from repro.models import lenet
+    from repro.parallel import pipeline as pipe_mod
+    from repro.configs.lenet5 import CONFIG
+
+    params = lenet.init_lenet(jax.random.PRNGKey(0), CONFIG)
+    mb_imgs = [jax.random.normal(jax.random.PRNGKey(m), (4, 28, 28, 1),
+                                 jnp.float32) for m in range(microbatches)]
+    prog = mapper.compile_lenet("serve", batch=4, partitions=2)
+    flat_per_mb = [prog.flatten_args(params, im) for im in mb_imgs]
+
+    def gpipe_all():
+        return pipe_mod.run_partitioned(prog.stages, prog.out_refs,
+                                        flat_per_mb)
+
+    def sequential_all():
+        return [prog(params, im) for im in mb_imgs]
+
+    jax.block_until_ready(jax.tree.leaves(gpipe_all()))     # warm stage jits
+    jax.block_until_ready(jax.tree.leaves(sequential_all()))
+    t0 = time.perf_counter()
+    for _ in range(3):
+        jax.block_until_ready(jax.tree.leaves(gpipe_all()))
+    t_pipe = (time.perf_counter() - t0) / 3
+    t0 = time.perf_counter()
+    for _ in range(3):
+        jax.block_until_ready(jax.tree.leaves(sequential_all()))
+    t_seq = (time.perf_counter() - t0) / 3
+    return {
+        "microbatches": microbatches,
+        "gpipe_steps_per_s": 1.0 / t_pipe,
+        "sequential_steps_per_s": 1.0 / t_seq,
+        "driver_overhead": t_pipe / t_seq,
+    }
+
+
+def run() -> list[str]:
+    from repro import mapper
+
+    results: dict[str, dict] = {}
+
+    # modeled: balanced 4-partition lenet5 train step (carries the bar)
+    sched = mapper.map_lenet("train", batch=8)
+    results["lenet5_train_modeled"] = _timeline_entry(
+        sched, MICROBATCHES, partitions=4)
+
+    # modeled: full llama3-8b decode, tokens/s at steady state (unbarred —
+    # the scanned layer stack is one uncuttable partition)
+    batch = 1
+    sched = mapper.map_arch("llama3-8b", "serve", seq_len=32, batch=batch,
+                            partitions=2)
+    entry = _timeline_entry(sched, MICROBATCHES, partitions=2)
+    entry["steady_tokens_per_s"] = batch * entry["steady_sets_per_s"]
+    results["llama3_8b_decode_modeled"] = entry
+
+    # executed: real GPipe driver over the partition programs
+    results["lenet5_forward_executed"] = _executed_entry(MICROBATCHES)
+
+    _OUT.write_text(json.dumps(results, indent=2, sort_keys=True) + "\n")
+
+    lt = results["lenet5_train_modeled"]
+    # the acceptance bar is a real gate: benchmarks.run exits non-zero on
+    # a raise, so the pipelined plan regressing below 1.5x fails CI
+    assert lt["speedup"] >= SPEEDUP_BAR, (
+        f"lenet5 train: pipelined speedup {lt['speedup']:.2f} at "
+        f"{MICROBATCHES} microbatches fell below the "
+        f"{SPEEDUP_BAR}x acceptance bar")
+
+    rows = []
+    for tag, r in results.items():
+        for key in ("speedup", "steady_sets_per_s", "steady_tokens_per_s",
+                    "interval_s", "gpipe_steps_per_s", "driver_overhead"):
+            if key in r:
+                note = (f"target>={SPEEDUP_BAR}"
+                        if (tag, key) == ("lenet5_train_modeled", "speedup")
+                        else "")
+                rows.append(f"pipeline.{tag}.{key},{r[key]:.4g},{note}")
+    rows.append(f"pipeline.json,{_OUT.name},perf trajectory artifact")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -167,27 +167,34 @@ def iter_eqns(jaxpr):
     by ``repro.mapper.graph`` — keep cost semantics here, in one place.
     """
     for eqn in jaxpr.eqns:
-        name = eqn.primitive.name
-        if name == "scan":
-            length = int(eqn.params["length"])
-            for inner_eqn, s in iter_eqns(eqn.params["jaxpr"].jaxpr):
-                yield inner_eqn, s * length
-        elif name == "while":
-            # trip count unknown at trace time; count one body iteration.
-            yield from iter_eqns(eqn.params["body_jaxpr"].jaxpr)
-        elif name == "cond":
-            # materialize each branch's stream once (walking twice — count
-            # then re-yield — would be exponential in cond nesting depth)
-            streams = [list(iter_eqns(b.jaxpr))
-                       for b in eqn.params["branches"]]
-            yield from max(streams, key=_stream_cost_key)
-        elif name in CALL_PRIMS:
-            inner_p = inner_jaxpr(eqn)
-            if inner_p is not None:
-                inner = inner_p.jaxpr if hasattr(inner_p, "jaxpr") else inner_p
-                yield from iter_eqns(inner)
-        else:
-            yield eqn, 1
+        yield from iter_eqn(eqn)
+
+
+def iter_eqn(eqn):
+    """``iter_eqns`` restricted to one equation's subtree — the mapper's
+    graph builder walks top-level equations one at a time so each node
+    remembers which top-level equation (= pipeline cut point) owns it."""
+    name = eqn.primitive.name
+    if name == "scan":
+        length = int(eqn.params["length"])
+        for inner_eqn, s in iter_eqns(eqn.params["jaxpr"].jaxpr):
+            yield inner_eqn, s * length
+    elif name == "while":
+        # trip count unknown at trace time; count one body iteration.
+        yield from iter_eqns(eqn.params["body_jaxpr"].jaxpr)
+    elif name == "cond":
+        # materialize each branch's stream once (walking twice — count
+        # then re-yield — would be exponential in cond nesting depth)
+        streams = [list(iter_eqns(b.jaxpr))
+                   for b in eqn.params["branches"]]
+        yield from max(streams, key=_stream_cost_key)
+    elif name in CALL_PRIMS:
+        inner_p = inner_jaxpr(eqn)
+        if inner_p is not None:
+            inner = inner_p.jaxpr if hasattr(inner_p, "jaxpr") else inner_p
+            yield from iter_eqns(inner)
+    else:
+        yield eqn, 1
 
 
 def count_ops_jaxpr(jaxpr) -> OpCounts:

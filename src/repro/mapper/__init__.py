@@ -3,12 +3,18 @@
 Compiles any JAX function onto an explicit chip -> tile -> subarray
 hierarchy of the paper's SOT-MRAM PIM arrays:
 
-    jaxpr --(graph)--> operator graph --(placement)--> weight-stationary
-    subarray blocks --(schedule)--> cost-rolled static pipeline
-    --(executor | compile)--> numerical execution with the Pallas PIM
-    kernels: eager per-equation interpretation (the oracle) or one
-    jittable, differentiable compiled program (the execution substrate
-    behind ``Trainer(backend="pim")`` / ``ServeEngine(backend="pim")``).
+    jaxpr --(graph)--> operator graph --(partition)--> K pipeline
+    partitions --(placement)--> weight-stationary subarray blocks with
+    explicit (chip, tile, subarray) coordinates along a
+    locality-preserving tile curve --(schedule)--> cost-rolled static
+    pipeline + microbatch timeline (fill/steady/drain, per-link
+    contention) --(executor | compile)--> numerical execution with the
+    Pallas PIM kernels: eager per-equation interpretation (the oracle),
+    one jittable differentiable compiled program, or one program per
+    partition driven by the GPipe microbatch loop in
+    ``repro.parallel.pipeline`` (the execution substrates behind
+    ``Trainer(backend="pim")`` / ``ServeEngine(backend="pim")`` and
+    their ``microbatches=``/``partitions=`` knobs).
 
 The aggregate estimator (``repro.core.estimator``) remains the ideal
 zero-stall bound; ``Schedule.reconcile()`` proves each schedule against it.
@@ -16,28 +22,37 @@ zero-stall bound; ``Schedule.reconcile()`` proves each schedule against it.
 
 from repro.mapper.api import (abstract_like, compile_arch, compile_lenet,
                               map_arch, map_lenet)
-from repro.mapper.compile import (CompiledProgram, clear_program_cache,
-                                  compile_schedule, program_cache_stats)
+from repro.mapper.compile import (CompiledProgram, PartitionedProgram,
+                                  StageProgram, clear_program_cache,
+                                  compile_partitioned, compile_schedule,
+                                  program_cache_stats)
 from repro.mapper.executor import ScheduleExecutor, run_schedule
 from repro.mapper.lowering import LoweringContext, eval_placed
 from repro.mapper.graph import (ConvNode, EltwiseNode, MatmulNode, OpGraph,
                                 OpNode, build_graph)
 from repro.mapper.hardware import (ChipSpec, PIMHierarchy, SubarraySpec,
-                                   TileSpec, default_hierarchy,
-                                   make_subarray)
-from repro.mapper.placement import (NodePlacement, PlacedBlock, Placement,
-                                    PlacementPolicy, place)
-from repro.mapper.schedule import (Schedule, ScheduleReport, StageCost,
-                                   build_schedule, build_schedule_from_graph)
+                                   TileSpec, curve_candidates,
+                                   default_hierarchy, make_subarray,
+                                   tile_curve)
+from repro.mapper.placement import (GraphPartition, NodePlacement,
+                                    PlacedBlock, Placement, PlacementPolicy,
+                                    node_homes, partition, place,
+                                    total_transfer_hops)
+from repro.mapper.schedule import (PartitionCost, PipelineTimeline, Schedule,
+                                   ScheduleReport, StageCost, build_schedule,
+                                   build_schedule_from_graph)
 
 __all__ = [
     "ChipSpec", "CompiledProgram", "ConvNode", "EltwiseNode", "abstract_like",
-    "LoweringContext", "MatmulNode", "NodePlacement", "OpGraph", "OpNode",
-    "PIMHierarchy", "PlacedBlock", "Placement", "PlacementPolicy",
-    "Schedule", "ScheduleExecutor", "ScheduleReport", "StageCost",
-    "SubarraySpec", "TileSpec", "build_graph", "build_schedule",
-    "build_schedule_from_graph", "clear_program_cache", "compile_arch",
-    "compile_lenet", "compile_schedule", "default_hierarchy", "eval_placed",
-    "make_subarray", "map_arch", "map_lenet", "place",
-    "program_cache_stats", "run_schedule",
+    "GraphPartition", "LoweringContext", "MatmulNode", "NodePlacement",
+    "OpGraph", "OpNode", "PIMHierarchy", "PartitionCost",
+    "PartitionedProgram", "PipelineTimeline", "PlacedBlock", "Placement",
+    "PlacementPolicy", "Schedule", "ScheduleExecutor", "ScheduleReport",
+    "StageCost", "StageProgram", "SubarraySpec", "TileSpec", "build_graph",
+    "build_schedule", "build_schedule_from_graph", "clear_program_cache",
+    "compile_arch", "compile_lenet", "compile_partitioned",
+    "compile_schedule", "curve_candidates", "default_hierarchy",
+    "eval_placed", "make_subarray", "map_arch", "map_lenet", "node_homes",
+    "partition", "place", "program_cache_stats", "run_schedule",
+    "tile_curve", "total_transfer_hops",
 ]

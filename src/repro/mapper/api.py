@@ -42,12 +42,15 @@ def map_arch(name: str, kind: str = "train", *, seq_len: int = 128,
              batch: int = 1, smoke: bool = False,
              hierarchy: PIMHierarchy | None = None,
              policy: placement_mod.PlacementPolicy | None = None,
-             tech: str = "proposed") -> schedule_mod.Schedule:
+             tech: str = "proposed",
+             partitions: int | None = None) -> schedule_mod.Schedule:
     """Map one registered architecture's train / serve step.
 
     ``kind='train'`` schedules a full optimizer step (fwd + bwd + update);
     ``kind='serve'`` schedules one decode step against a ``seq_len`` cache.
     ``smoke=True`` uses the reduced config (fast CI path).
+    ``partitions=K`` cuts the step into K pipeline partitions (see
+    ``Schedule.pipeline`` / ``compile_partitioned``).
     """
     from repro.launch import steps as steps_mod
 
@@ -64,21 +67,24 @@ def map_arch(name: str, kind: str = "train", *, seq_len: int = 128,
         b_shapes = steps_mod.input_specs(cfg, shape)
         return schedule_mod.build_schedule(
             step, p_shapes, o_shapes, b_shapes,
-            hierarchy=hierarchy, policy=policy, tech=tech)
+            hierarchy=hierarchy, policy=policy, tech=tech,
+            partitions=partitions)
     if kind == "serve":
         step = steps_mod.make_serve_step(cfg)
         c_shapes = steps_mod.abstract_cache(cfg, shape)
         token, pos = steps_mod.decode_input_specs(cfg, shape)
         return schedule_mod.build_schedule(
             step, p_shapes, c_shapes, token, pos,
-            hierarchy=hierarchy, policy=policy, tech=tech)
+            hierarchy=hierarchy, policy=policy, tech=tech,
+            partitions=partitions)
     raise ValueError(f"kind must be 'train' or 'serve', got {kind!r}")
 
 
 def map_lenet(kind: str = "serve", *, batch: int = 4, lr: float = 0.05,
               hierarchy: PIMHierarchy | None = None,
               policy: placement_mod.PlacementPolicy | None = None,
-              tech: str = "proposed") -> schedule_mod.Schedule:
+              tech: str = "proposed",
+              partitions: int | None = None) -> schedule_mod.Schedule:
     """Map the paper's LeNet: ``serve`` = forward pass, ``train`` = one
     SGD step on the cross-entropy loss."""
     from repro.configs.lenet5 import CONFIG
@@ -90,7 +96,8 @@ def map_lenet(kind: str = "serve", *, batch: int = 4, lr: float = 0.05,
     if kind == "serve":
         return schedule_mod.build_schedule(
             lenet.lenet_apply, _abstract(params), images,
-            hierarchy=hierarchy, policy=policy, tech=tech)
+            hierarchy=hierarchy, policy=policy, tech=tech,
+            partitions=partitions)
     if kind == "train":
         labels = jax.ShapeDtypeStruct((batch,), jnp.int32)
 
@@ -102,7 +109,8 @@ def map_lenet(kind: str = "serve", *, batch: int = 4, lr: float = 0.05,
 
         return schedule_mod.build_schedule(
             train_step, _abstract(params), images, labels,
-            hierarchy=hierarchy, policy=policy, tech=tech)
+            hierarchy=hierarchy, policy=policy, tech=tech,
+            partitions=partitions)
     raise ValueError(f"kind must be 'train' or 'serve', got {kind!r}")
 
 
@@ -111,10 +119,15 @@ def compile_arch(name: str, kind: str = "train", *, seq_len: int = 128,
                  hierarchy: PIMHierarchy | None = None,
                  policy: placement_mod.PlacementPolicy | None = None,
                  tech: str = "proposed", block: int = 128,
-                 interpret: bool = True) -> compile_mod.CompiledProgram:
-    """Map one architecture's step and compile it to a jittable program."""
+                 interpret: bool = True, partitions: int | None = None):
+    """Map one architecture's step and compile it to a jittable program
+    (a ``PartitionedProgram`` of K stage programs when ``partitions=K``)."""
     sched = map_arch(name, kind, seq_len=seq_len, batch=batch, smoke=smoke,
-                     hierarchy=hierarchy, policy=policy, tech=tech)
+                     hierarchy=hierarchy, policy=policy, tech=tech,
+                     partitions=partitions)
+    if partitions:
+        return compile_mod.compile_partitioned(sched, block=block,
+                                               interpret=interpret)
     return compile_mod.compile_schedule(sched, block=block,
                                         interpret=interpret)
 
@@ -123,9 +136,13 @@ def compile_lenet(kind: str = "serve", *, batch: int = 4, lr: float = 0.05,
                   hierarchy: PIMHierarchy | None = None,
                   policy: placement_mod.PlacementPolicy | None = None,
                   tech: str = "proposed", block: int = 128,
-                  interpret: bool = True) -> compile_mod.CompiledProgram:
-    """Map the paper's LeNet and compile it to a jittable program."""
+                  interpret: bool = True, partitions: int | None = None):
+    """Map the paper's LeNet and compile it to a jittable program
+    (a ``PartitionedProgram`` of K stage programs when ``partitions=K``)."""
     sched = map_lenet(kind, batch=batch, lr=lr, hierarchy=hierarchy,
-                      policy=policy, tech=tech)
+                      policy=policy, tech=tech, partitions=partitions)
+    if partitions:
+        return compile_mod.compile_partitioned(sched, block=block,
+                                               interpret=interpret)
     return compile_mod.compile_schedule(sched, block=block,
                                         interpret=interpret)

@@ -1,4 +1,4 @@
-"""Compile a placed schedule into one jittable, differentiable function.
+"""Compile a placed schedule into jittable, differentiable programs.
 
 The mapper's interpreter (``repro.mapper.executor``) re-walks the jaxpr
 equation by equation on every call — eager dispatch that cannot be jitted
@@ -24,6 +24,19 @@ repeated steps pay zero retrace (asserted via ``trace_count``).
 
 The interpreter remains the oracle: ``CompiledProgram.verify`` checks the
 program against both the eager interpreter and ``jax.jit(fn)``.
+
+**Partitioned programs**: when a schedule was built with pipeline
+partitions (``build_schedule(..., partitions=K)``),
+:func:`compile_partitioned` lowers each partition into its own
+:class:`StageProgram` — a jittable function over exactly the values that
+cross its boundaries. Stage inputs/outputs are *explicit transfer
+points*: each input is tagged with its provenance (a program argument or
+an earlier stage's output), so a driver — sequential
+(``PartitionedProgram.__call__``) or the GPipe microbatch loop in
+``repro.parallel.pipeline`` — can stream activation sets through the
+stages without re-deriving dataflow. Running the stages in order is
+numerically identical to the unpartitioned program: same equations, same
+order, same kernels.
 """
 
 from __future__ import annotations
@@ -35,7 +48,8 @@ from typing import Any, Callable
 import jax
 import numpy as np
 
-from repro.mapper.lowering import LoweringContext, eval_placed
+from repro.mapper import placement as placement_mod
+from repro.mapper.lowering import LoweringContext, eval_eqns, eval_placed
 from repro.mapper.schedule import Schedule
 
 
@@ -107,14 +121,18 @@ _CACHE_MAX = 32
 _STATS = {"hits": 0, "misses": 0}
 
 
-def _program_key(schedule: Schedule, block: int, interpret: bool) -> tuple:
+def _program_key(schedule: Schedule, block: int, interpret: bool,
+                 boundaries: tuple = ()) -> tuple:
     closed = schedule.graph.closed_jaxpr
     avals = tuple((tuple(v.aval.shape), str(v.aval.dtype))
                   for v in closed.jaxpr.invars)
     fn = schedule.graph.fn
     fn_key: Any = fn if fn is not None else id(closed)
+    # placement.signature() folds in the hierarchy fingerprint (tech +
+    # tile/chip geometry), so same-grid placements on different machines
+    # get distinct keys
     return (fn_key, avals, schedule.placement.signature(),
-            schedule.hierarchy.tech, block, interpret)
+            block, interpret, boundaries)
 
 
 def program_cache_stats() -> dict[str, int]:
@@ -170,6 +188,236 @@ def compile_schedule(schedule: Schedule, *, block: int = 128,
 
     program = CompiledProgram(schedule=schedule, fn=fn, jitted=jax.jit(fn),
                               ctx=ctx)
+    holder.append(program)
+    if use_cache:
+        _CACHE[key] = program
+        while len(_CACHE) > _CACHE_MAX:
+            _CACHE.popitem(last=False)
+    return program
+
+
+# ---------------------------------------------------------------------------
+# partitioned programs (one jittable stage per pipeline partition)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StageProgram:
+    """One pipeline partition lowered to a jittable function.
+
+    ``fn(*invals) -> tuple(outvals)`` evaluates exactly this partition's
+    top-level equations (through the shared lowering-rule table, so placed
+    matmuls run as blocked PIM kernel calls). ``in_refs[i]`` names where
+    input ``i`` comes from — ``("arg", flat_idx)`` for a program argument
+    or ``("stage", s, j)`` for output ``j`` of an earlier stage — making
+    every inter-stage transfer explicit for the microbatch driver.
+    """
+
+    idx: int
+    fn: Callable
+    jitted: Callable
+    in_refs: tuple[tuple, ...]
+    n_outs: int
+    out_bits: int                 # activation bits this stage streams out
+
+
+@dataclasses.dataclass
+class PartitionedProgram:
+    """A schedule compiled as one jittable program per pipeline partition.
+
+    Calling the program runs the stages in order inside one ``jax.jit`` —
+    numerically identical to the unpartitioned ``CompiledProgram`` (same
+    equations, same kernels, same order). The stage list is the real
+    pipeline surface: ``repro.parallel.pipeline`` streams microbatches
+    through ``stages`` with GPipe fill/drain and differentiates them
+    per-stage with ``jax.vjp``.
+    """
+
+    schedule: Schedule
+    partitions: list
+    stages: list[StageProgram]
+    out_refs: tuple[tuple, ...]
+    ctx: LoweringContext
+    fn: Callable = None
+    jitted: Callable = None
+    trace_count: int = 0          # whole-program traces (jit/grad)
+    stage_trace_count: int = 0    # per-stage body traces (gpipe driver)
+
+    def __call__(self, *args, **kwargs):
+        return self.jitted(*args, **kwargs)
+
+    @property
+    def n_partitions(self) -> int:
+        return len(self.stages)
+
+    @property
+    def placed_calls(self) -> int:
+        return self.ctx.placed_calls
+
+    @property
+    def eltwise_calls(self) -> int:
+        return self.ctx.eltwise_calls
+
+    def flatten_args(self, *args, **kwargs) -> list:
+        """Flatten a call's arguments exactly like the program does,
+        checking the traced pytree structure — drivers use this to build
+        the per-microbatch flat argument lists the stage ``in_refs``
+        index into."""
+        flat, tree = jax.tree.flatten((args, kwargs))
+        in_tree = self.schedule.graph.in_tree
+        if in_tree is not None and tree != in_tree:
+            raise TypeError(f"argument structure {tree} != traced "
+                            f"structure {in_tree}")
+        return flat
+
+    def unflatten_outs(self, out_flat: list):
+        out_tree = self.schedule.graph.out_tree
+        return (jax.tree.unflatten(out_tree, out_flat) if out_tree
+                else out_flat)
+
+    def verify(self, *args, rtol: float = 1e-4, atol: float = 1e-4,
+               **kwargs) -> float:
+        """Check the partitioned program against ``jax.jit(fn)``."""
+        got = self.jitted(*args, **kwargs)
+        worst = 0.0
+        fn = self.schedule.graph.fn
+        assert fn is not None, "graph was built without a fn reference"
+        want = jax.jit(fn)(*args, **kwargs)
+        for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            g, w = np.asarray(g), np.asarray(w)
+            np.testing.assert_allclose(g, w, rtol=rtol, atol=atol)
+            if g.size:
+                worst = max(worst, float(np.max(np.abs(g - w))))
+        return worst
+
+
+def _aval_bits(v) -> int:
+    return int(np.prod(v.aval.shape, dtype=np.int64)) * v.aval.dtype.itemsize * 8
+
+
+def compile_partitioned(schedule: Schedule, *,
+                        partitions: int | None = None, block: int = 128,
+                        interpret: bool = True,
+                        use_cache: bool = True) -> PartitionedProgram:
+    """Lower ``schedule`` into one jittable program per pipeline partition.
+
+    Uses the partitions the schedule was built with
+    (``build_schedule(..., partitions=K)``); pass ``partitions=K`` to cut
+    here instead. Each stage program consumes exactly the values crossing
+    its upstream boundary (tagged with provenance) and returns the values
+    crossing its downstream boundary — the explicit transfer points the
+    microbatch pipeline driver streams.
+    """
+    parts = schedule.partitions
+    if partitions is not None:
+        parts = placement_mod.partition(schedule.graph, partitions)
+    if not parts:
+        raise ValueError(
+            "schedule has no pipeline partitions; build it with "
+            "build_schedule(..., partitions=K) or pass partitions=K")
+    boundaries = tuple((p.eqn_start, p.eqn_end) for p in parts)
+
+    if use_cache:
+        key = _program_key(schedule, block, interpret, boundaries)
+        hit = _CACHE.get(key)
+        if hit is not None and isinstance(hit, PartitionedProgram):
+            _STATS["hits"] += 1
+            _CACHE.move_to_end(key)
+            return hit
+        _STATS["misses"] += 1
+
+    ctx = LoweringContext(schedule, block=block, interpret=interpret)
+    closed = schedule.graph.closed_jaxpr
+    jaxpr = closed.jaxpr
+    consts_by_var = dict(zip(jaxpr.constvars, closed.consts))
+    invar_idx = {v: i for i, v in enumerate(jaxpr.invars)}
+
+    produced_by: dict[Any, tuple[int, int]] = {}   # var -> (stage, out_idx)
+    # last top-level eqn index reading each var (len(eqns) if returned)
+    last_read: dict[Any, int] = {}
+    for e, eqn in enumerate(jaxpr.eqns):
+        for v in eqn.invars:
+            if not isinstance(v, jax.core.Literal):
+                last_read[v] = e
+    for v in jaxpr.outvars:
+        if not isinstance(v, jax.core.Literal):
+            last_read[v] = len(jaxpr.eqns)
+
+    holder: list[PartitionedProgram] = []
+    stages: list[StageProgram] = []
+    for p in parts:
+        eqns = jaxpr.eqns[p.eqn_start:p.eqn_end]
+        inner_prod = {v for eqn in eqns for v in eqn.outvars
+                      if not isinstance(v, jax.core.DropVar)}
+        in_vars: list = []
+        stage_consts: dict = {}
+        for eqn in eqns:
+            for v in eqn.invars:
+                if isinstance(v, jax.core.Literal) or v in inner_prod:
+                    continue
+                if v in consts_by_var:
+                    stage_consts[v] = consts_by_var[v]
+                elif v not in in_vars:
+                    in_vars.append(v)
+        out_vars = [v for eqn in eqns for v in eqn.outvars
+                    if not isinstance(v, jax.core.DropVar)
+                    and last_read.get(v, -1) >= p.eqn_end]
+        in_refs = []
+        for v in in_vars:
+            if v in invar_idx:
+                in_refs.append(("arg", invar_idx[v]))
+            else:
+                in_refs.append(("stage", *produced_by[v]))
+        for j, v in enumerate(out_vars):
+            produced_by[v] = (p.idx, j)
+
+        def stage_fn(*invals, _eqns=eqns, _ins=tuple(in_vars),
+                     _outs=tuple(out_vars), _consts=dict(stage_consts)):
+            if holder and any(isinstance(x, jax.core.Tracer)
+                              for x in invals):
+                holder[0].stage_trace_count += 1
+            env = dict(_consts)
+            env.update(zip(_ins, invals))
+            eval_eqns(ctx, _eqns, env)
+            return tuple(env[v] for v in _outs)
+
+        stages.append(StageProgram(
+            idx=p.idx, fn=stage_fn, jitted=jax.jit(stage_fn),
+            in_refs=tuple(in_refs), n_outs=len(out_vars),
+            out_bits=sum(_aval_bits(v) for v in out_vars)))
+
+    out_refs: list[tuple] = []
+    for v in jaxpr.outvars:
+        if isinstance(v, jax.core.Literal):
+            out_refs.append(("lit", v.val))
+        elif v in invar_idx:
+            out_refs.append(("arg", invar_idx[v]))
+        else:
+            out_refs.append(("stage", *produced_by[v]))
+
+    program = PartitionedProgram(schedule=schedule, partitions=list(parts),
+                                 stages=stages, out_refs=tuple(out_refs),
+                                 ctx=ctx)
+
+    def fn(*args, **kwargs):
+        flat = program.flatten_args(*args, **kwargs)
+        if holder and any(isinstance(x, jax.core.Tracer) for x in flat):
+            holder[0].trace_count += 1
+        stage_outs: list[tuple] = []
+
+        def resolve(ref):
+            if ref[0] == "arg":
+                return flat[ref[1]]
+            if ref[0] == "stage":
+                return stage_outs[ref[1]][ref[2]]
+            return ref[1]                      # ("lit", val)
+
+        for st in stages:
+            stage_outs.append(st.fn(*[resolve(r) for r in st.in_refs]))
+        return program.unflatten_outs([resolve(r) for r in out_refs])
+
+    program.fn = fn
+    program.jitted = jax.jit(fn)
     holder.append(program)
     if use_cache:
         _CACHE[key] = program

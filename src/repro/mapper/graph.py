@@ -48,6 +48,8 @@ class OpNode:
     adds: int = 0
     muls: int = 0
     eqn_id: int = 0           # id() of the source eqn (executor lookup key)
+    top_eqn: int = 0          # index of the owning *top-level* jaxpr eqn —
+                              # partition cuts land on top-eqn boundaries
 
     @property
     def weight_shape(self) -> tuple[int, int] | None:
@@ -129,7 +131,10 @@ def build_graph_from_jaxpr(closed_jaxpr, in_tree=None, out_tree=None,
     def read_origin(v) -> frozenset[int]:
         return origin.get(id(v), frozenset())
 
-    for eqn, scale in estimator.iter_eqns(closed_jaxpr.jaxpr):
+    top_stream = [(eqn, scale, top_idx)
+                  for top_idx, top in enumerate(closed_jaxpr.jaxpr.eqns)
+                  for eqn, scale in estimator.iter_eqn(top)]
+    for eqn, scale, top_idx in top_stream:
         name = eqn.primitive.name
         src = frozenset().union(*[read_origin(v) for v in eqn.invars]) \
             if eqn.invars else frozenset()
@@ -143,14 +148,14 @@ def build_graph_from_jaxpr(closed_jaxpr, in_tree=None, out_tree=None,
                 idx=idx, kind="matmul", name=f"dot_general.{idx}",
                 repeat=scale, deps=sorted(src), out_shape=out_shape,
                 out_elems=_out_elems(eqn), macs=scale * b * m * n * k,
-                eqn_id=id(eqn), batch=b, m=m, k=k, n=n)
+                eqn_id=id(eqn), top_eqn=top_idx, batch=b, m=m, k=k, n=n)
         elif kind == "conv":
             out_elems, fan_in, cout = estimator.conv_dims(eqn)
             node = ConvNode(
                 idx=idx, kind="conv", name=f"conv.{idx}",
                 repeat=scale, deps=sorted(src), out_shape=out_shape,
                 out_elems=out_elems, macs=scale * out_elems * fan_in,
-                eqn_id=id(eqn), fan_in=fan_in, cout=cout)
+                eqn_id=id(eqn), top_eqn=top_idx, fan_in=fan_in, cout=cout)
         elif kind == "eltwise":
             n_el = _out_elems(eqn)
             is_add = name in estimator.ADD_PRIMS
@@ -160,7 +165,8 @@ def build_graph_from_jaxpr(closed_jaxpr, in_tree=None, out_tree=None,
                 out_elems=n_el,
                 adds=scale * n_el if is_add else 0,
                 muls=0 if is_add else scale * n_el,
-                eqn_id=id(eqn), op=name, n_elems=scale * n_el)
+                eqn_id=id(eqn), top_eqn=top_idx, op=name,
+                n_elems=scale * n_el)
         if node is not None:
             nodes.append(node)
             out_origin = frozenset({node.idx})

@@ -22,6 +22,20 @@ row, so a subarray stores ``weight_rows x weight_cols`` values and exposes
 ``cols`` column-parallel MAC lanes (operands broadcast on shared row lines —
 the §4.3 flexibility claim, and the same lane provisioning rule
 ``repro.core.estimator.pim_estimate`` uses).
+
+Topology model: a tile's mesh coordinates are ``(x, y) = (t % d, t // d)``
+with ``d = mesh_dim``. Transfers are routed XY (x first, then y); each
+directed mesh edge, each tile's activation bus and each chip-pair SerDes
+link is a *shared resource* with a bandwidth, so the scheduler can charge
+per-link contention when several pipeline partitions stream microbatches
+concurrently. Cross-chip moves pay real NoC legs — source tile to its
+chip's IO corner (tile 0), the off-package link, IO corner to the
+destination tile — not a flat per-hop constant.
+
+``tile_curve`` enumerates a chip's tiles along a locality-preserving curve
+(Hilbert for power-of-two meshes, serpentine otherwise); the
+topology-aware placer allocates subarrays along such a curve so blocks
+adjacent in allocation order are adjacent on the mesh.
 """
 
 from __future__ import annotations
@@ -118,6 +132,70 @@ class ChipSpec:
     def mesh_dim(self) -> int:
         return max(1, int(math.isqrt(self.tiles)))
 
+    def tile_xy(self, tile: int) -> tuple[int, int]:
+        d = self.mesh_dim
+        return tile % d, tile // d
+
+
+def _hilbert_xy(order: int, idx: int) -> tuple[int, int]:
+    """Position of step ``idx`` on the Hilbert curve over a 2^order mesh."""
+    x = y = 0
+    t = idx
+    s = 1
+    n = 1 << order
+    while s < n:
+        rx = 1 & (t // 2)
+        ry = 1 & (t ^ rx)
+        if ry == 0:
+            if rx == 1:
+                x, y = s - 1 - x, s - 1 - y
+            x, y = y, x
+        x += s * rx
+        y += s * ry
+        t //= 4
+        s *= 2
+    return x, y
+
+
+def tile_curve(chip: ChipSpec, kind: str) -> tuple[int, ...]:
+    """Physical tile indices of one chip in curve visit order.
+
+    ``kind``: ``"rowmajor"`` (identity — the flat packer's order),
+    ``"snake"`` (serpentine rows: consecutive visits are always mesh
+    neighbours), or ``"hilbert"`` (power-of-two square meshes only —
+    raises otherwise; callers filter candidates via ``curve_candidates``).
+    """
+    d = chip.mesh_dim
+    n = chip.tiles
+    if kind == "rowmajor":
+        return tuple(range(n))
+    if kind == "snake":
+        order = []
+        for y in range((n + d - 1) // d):
+            row = [t for t in range(y * d, min((y + 1) * d, n))]
+            order.extend(row if y % 2 == 0 else row[::-1])
+        return tuple(order)
+    if kind == "hilbert":
+        if d * d != n or d & (d - 1):
+            raise ValueError(f"hilbert needs a power-of-two square mesh, "
+                             f"got {n} tiles / dim {d}")
+        order = int(math.log2(d))
+        out = []
+        for i in range(n):
+            x, y = _hilbert_xy(order, i)
+            out.append(y * d + x)
+        return tuple(out)
+    raise ValueError(f"unknown curve kind {kind!r}")
+
+
+def curve_candidates(chip: ChipSpec) -> dict[str, tuple[int, ...]]:
+    """The curve orders a topology-aware placer may choose between."""
+    kinds = ["rowmajor", "snake"]
+    d = chip.mesh_dim
+    if d * d == chip.tiles and not (d & (d - 1)):
+        kinds.append("hilbert")
+    return {k: tile_curve(chip, k) for k in kinds}
+
 
 @dataclasses.dataclass(frozen=True)
 class PIMHierarchy:
@@ -153,24 +231,45 @@ class PIMHierarchy:
 
     def _tile_hops(self, tile_a: int, tile_b: int) -> int:
         """Manhattan distance on the chip's tile mesh."""
-        d = self.chip.mesh_dim
-        ax, ay = tile_a % d, tile_a // d
-        bx, by = tile_b % d, tile_b // d
+        ax, ay = self.chip.tile_xy(tile_a)
+        bx, by = self.chip.tile_xy(tile_b)
         return abs(ax - bx) + abs(ay - by)
+
+    # tile 0 hosts the chip's off-package IO port: cross-chip transfers
+    # route source tile -> IO corner -> SerDes -> IO corner -> dest tile
+    IO_TILE = 0
+
+    def hop_count(self, src_sub: int, dst_sub: int) -> int:
+        """NoC mesh hops on the path between two subarrays' tiles (the
+        same-tile bus is not a mesh hop; a chip crossing adds both chips'
+        legs to/from their IO corners plus one SerDes hop)."""
+        if src_sub == dst_sub:
+            return 0
+        c_a, t_a, _ = self.locate(src_sub)
+        c_b, t_b, _ = self.locate(dst_sub)
+        if c_a == c_b:
+            return 0 if t_a == t_b else self._tile_hops(t_a, t_b)
+        return (self._tile_hops(t_a, self.IO_TILE)
+                + self._tile_hops(self.IO_TILE, t_b) + 1)
 
     def transfer_cost(self, bits: int, src_sub: int,
                       dst_sub: int) -> tuple[float, float]:
         """(latency_s, energy_j) to move ``bits`` from one subarray's tile
         to another's. Same subarray (co-located producer/consumer) -> free;
         same tile -> one bus transaction; same chip -> NoC hops; different
-        chips -> off-package link."""
+        chips -> NoC legs to/from each chip's IO corner plus the
+        off-package link (the mesh position of both endpoints matters)."""
         if bits <= 0 or src_sub == dst_sub:
             return 0.0, 0.0
         c_a, t_a, _ = self.locate(src_sub)
         c_b, t_b, _ = self.locate(dst_sub)
         if c_a != c_b:
-            t = bits / self.interchip_bits_per_s + self.chip.t_hop_s
-            e = bits * self.e_interchip_bit_j
+            legs = (self._tile_hops(t_a, self.IO_TILE)
+                    + self._tile_hops(self.IO_TILE, t_b))
+            t = (bits / self.interchip_bits_per_s
+                 + (legs + 1) * self.chip.t_hop_s)
+            e = bits * (self.e_interchip_bit_j
+                        + legs * self.chip.e_hop_bit_j)
             return t, e
         if t_a == t_b:
             t = bits / self.tile.bus_bits_per_s
@@ -180,6 +279,63 @@ class PIMHierarchy:
         t = bits / self.chip.noc_bits_per_s + hops * self.chip.t_hop_s
         e = bits * hops * self.chip.e_hop_bit_j
         return t, e
+
+    # -- shared-resource routing (pipeline contention model) ----------------
+
+    def _mesh_edges(self, chip: int, t_a: int, t_b: int) -> list[tuple]:
+        """Directed NoC edges of the XY route t_a -> t_b on one chip."""
+        ax, ay = self.chip.tile_xy(t_a)
+        bx, by = self.chip.tile_xy(t_b)
+        d = self.chip.mesh_dim
+        edges = []
+        x, y = ax, ay
+        while x != bx:
+            nx = x + (1 if bx > x else -1)
+            edges.append(("noc", chip, y * d + x, y * d + nx))
+            x = nx
+        while y != by:
+            ny = y + (1 if by > y else -1)
+            edges.append(("noc", chip, y * d + x, ny * d + x))
+            y = ny
+        return edges
+
+    def route_links(self, src_sub: int, dst_sub: int) -> list[tuple]:
+        """Shared-resource ids a transfer occupies, for per-link contention
+        accounting: ``("bus", chip, tile)`` same-tile bus transactions,
+        ``("noc", chip, t_from, t_to)`` directed mesh edges (XY routing),
+        ``("serdes", chip_a, chip_b)`` the off-package link."""
+        if src_sub == dst_sub:
+            return []
+        c_a, t_a, _ = self.locate(src_sub)
+        c_b, t_b, _ = self.locate(dst_sub)
+        if c_a == c_b:
+            if t_a == t_b:
+                return [("bus", c_a, t_a)]
+            return self._mesh_edges(c_a, t_a, t_b)
+        links = self._mesh_edges(c_a, t_a, self.IO_TILE)
+        links.append(("serdes", min(c_a, c_b), max(c_a, c_b)))
+        links += self._mesh_edges(c_b, self.IO_TILE, t_b)
+        return links
+
+    def link_time(self, link: tuple, bits: int) -> float:
+        """Seconds ``bits`` occupy one shared resource from route_links."""
+        kind = link[0]
+        if kind == "bus":
+            return bits / self.tile.bus_bits_per_s
+        if kind == "noc":
+            return bits / self.chip.noc_bits_per_s
+        if kind == "serdes":
+            return bits / self.interchip_bits_per_s
+        raise ValueError(f"unknown link kind {link!r}")
+
+    def fingerprint(self) -> tuple:
+        """Hashable identity of every geometry/cost knob — two hierarchies
+        with equal fingerprints price and route transfers identically, so
+        this belongs in every placement signature / program-cache key."""
+        return (self.tech, dataclasses.astuple(self.subarray),
+                dataclasses.astuple(self.tile),
+                dataclasses.astuple(self.chip),
+                self.interchip_bits_per_s, self.e_interchip_bit_j)
 
     def area_m2(self, n_subarrays: int) -> float:
         return n_subarrays * self.subarray.area_m2

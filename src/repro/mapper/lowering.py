@@ -217,23 +217,18 @@ assert set(RULES) == set(estimator.NODE_KINDS.values()), (
 # ---------------------------------------------------------------------------
 
 
-def eval_placed(ctx: LoweringContext, jaxpr, consts, args) -> list[Any]:
-    """Evaluate ``jaxpr`` with placed equations rewritten via RULES.
-
-    Works identically on concrete arrays (interpreter) and tracers
-    (compiler): the only difference is who calls it and when.
+def eval_eqns(ctx: LoweringContext, eqns, env: dict) -> None:
+    """Evaluate an equation run against ``env`` (var -> value), writing
+    each equation's outputs back into ``env``. This is the inner loop of
+    :func:`eval_placed` and the body of every per-partition stage program
+    (``repro.mapper.compile.compile_partitioned`` slices one jaxpr's
+    top-level equations into stages that each call this on their slice).
     """
-    env: dict[Any, Any] = {}
 
     def read(v):
         return v.val if isinstance(v, jax.core.Literal) else env[v]
 
-    def write(v, x):
-        env[v] = x
-
-    jax.util.safe_map(write, jaxpr.constvars, consts)
-    jax.util.safe_map(write, jaxpr.invars, args)
-    for eqn in jaxpr.eqns:
+    for eqn in eqns:
         invals = [read(v) for v in eqn.invars]
         name = eqn.primitive.name
         node = ctx.node_by_eqn.get(id(eqn))
@@ -258,5 +253,18 @@ def eval_placed(ctx: LoweringContext, jaxpr, consts, args) -> list[Any]:
             subfuns, bind_params = eqn.primitive.get_bind_params(eqn.params)
             ans = eqn.primitive.bind(*subfuns, *invals, **bind_params)
             outs = list(ans) if eqn.primitive.multiple_results else [ans]
-        jax.util.safe_map(write, eqn.outvars, outs)
-    return [read(v) for v in jaxpr.outvars]
+        jax.util.safe_map(env.__setitem__, eqn.outvars, outs)
+
+
+def eval_placed(ctx: LoweringContext, jaxpr, consts, args) -> list[Any]:
+    """Evaluate ``jaxpr`` with placed equations rewritten via RULES.
+
+    Works identically on concrete arrays (interpreter) and tracers
+    (compiler): the only difference is who calls it and when.
+    """
+    env: dict[Any, Any] = {}
+    jax.util.safe_map(env.__setitem__, jaxpr.constvars, consts)
+    jax.util.safe_map(env.__setitem__, jaxpr.invars, args)
+    eval_eqns(ctx, jaxpr.eqns, env)
+    return [v.val if isinstance(v, jax.core.Literal) else env[v]
+            for v in jaxpr.outvars]

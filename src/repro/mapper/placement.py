@@ -1,10 +1,11 @@
-"""Weight-stationary placement of an OpGraph onto a PIMHierarchy.
+"""Topology-aware, partition-aware placement of an OpGraph onto a
+PIMHierarchy.
 
 Each matmul/conv node's stationary (k x n) weight matrix is tiled into
 subarray-sized blocks — ``weight_rows`` values tall (1024 rows minus the
 paper's workspace reserve) by ``weight_cols`` values wide (1024 cells /
 32 bits per value) — and the blocks are packed onto subarrays in node
-order. Two refinements over naive one-block-per-subarray:
+order. Refinements over naive one-block-per-subarray:
 
   * **small-node sharing** — a single-block node whose k rows fit in the
     open partially-filled subarray's free row-bands is co-located there
@@ -14,19 +15,33 @@ order. Two refinements over naive one-block-per-subarray:
     are replicated ``r`` times; replicas serve interleaved activation rows,
     multiplying throughput at the cost of ``r`` x area. This is the
     FloatPIM-style throughput lever the aggregate estimator cannot express.
+  * **topology-aware packing** — packing hands out *allocation* indices
+    (contiguous, aggregate-cheap); a locality-preserving curve over each
+    chip's tile mesh (``repro.mapper.hardware.tile_curve``) maps them to
+    physical subarrays, so blocks adjacent in node order land on adjacent
+    tiles and producer->consumer activations travel few Manhattan NoC
+    hops. The packer evaluates the candidate curves against the graph's
+    actual edges and keeps the cheapest (never worse than the flat
+    row-major order, which ``PlacementPolicy(topology="flat")`` forces).
+  * **pipeline partitions** — ``partition()`` cuts the op graph into K
+    balanced partitions on top-level-equation boundaries (the only places
+    an executable program split can land), preferring boundaries where few
+    activation bits cross. Passing the partitions to ``place`` aligns each
+    partition's first block to a tile boundary so consecutive pipeline
+    stages occupy disjoint, mesh-adjacent tile runs.
 
 Placements are stored aggregately (``NodePlacement`` holds the block grid,
 not per-block objects) so billion-parameter graphs stay cheap to place;
-``iter_blocks`` materializes ``PlacedBlock``s on demand for the executor.
+``Placement.iter_blocks`` materializes ``PlacedBlock``s with explicit
+(chip, tile, subarray) coordinates on demand.
 
 Eltwise nodes run in the shared peripheral FP units and take no placement.
 
 Nodes inside ``scan`` bodies (``repeat > 1`` — scanned layer stacks, grad
 accumulation) are placed once and time-multiplexed: successive iterations
 stream their weight slice into the same block grid, and the scheduler
-serializes all ``repeat`` passes through the placed lanes. Expanding
-stacked layer weights into ``repeat`` resident copies is a policy a later
-sharding PR can add on top.
+serializes all ``repeat`` passes through the placed lanes. Partition cuts
+therefore never land inside a scan body — a scanned stack is one unit.
 """
 
 from __future__ import annotations
@@ -35,8 +50,11 @@ import dataclasses
 import math
 from typing import Iterator
 
+import jax
+import numpy as np
+
 from repro.mapper.graph import OpGraph, OpNode
-from repro.mapper.hardware import PIMHierarchy
+from repro.mapper.hardware import PIMHierarchy, curve_candidates
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,11 +66,19 @@ class PlacementPolicy:
     hot_macs_per_lane: float = 65536  # replicate until macs/lane <= this
     max_replicas: int = 8
     share_subarrays: bool = True      # co-locate whole small nodes
+    topology: str = "affinity"        # "affinity" (curve search) | "flat"
+    align_partitions: bool = True     # partition starts on tile boundaries
 
 
 @dataclasses.dataclass(frozen=True)
 class PlacedBlock:
-    """One weight block resident on one subarray (value coordinates)."""
+    """One weight block resident on one subarray (value coordinates).
+
+    ``subarray`` is an *allocation* index when yielded by
+    ``NodePlacement.iter_blocks`` (the lowering rules only need the block
+    grid) and a *physical* index — with ``(chip, tile, local)`` coordinates
+    filled in — when yielded by ``Placement.iter_blocks``.
+    """
 
     node: int
     replica: int
@@ -61,6 +87,9 @@ class PlacedBlock:
     n_rows: int
     n_cols: int
     subarray: int
+    chip: int = -1
+    tile: int = -1
+    local: int = -1
 
 
 @dataclasses.dataclass
@@ -73,7 +102,7 @@ class NodePlacement:
     row_blocks: int
     col_blocks: int
     replicas: int
-    first_subarray: int
+    first_subarray: int               # allocation index (see Placement)
     shared: bool = False              # True -> rides the open subarray
 
     @property
@@ -109,12 +138,169 @@ class NodePlacement:
                                   else self.first_subarray + flat))
 
 
+# ---------------------------------------------------------------------------
+# pipeline partitions
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphPartition:
+    """One contiguous pipeline partition: top-level eqns [eqn_start,
+    eqn_end) and every graph node they own. ``in_bits``/``out_bits`` are
+    the activation bits crossing the upstream/downstream boundary per
+    activation set (the microbatch transfer the pipeline streams)."""
+
+    idx: int
+    eqn_start: int
+    eqn_end: int
+    nodes: tuple[int, ...]
+    macs: int
+    adds: int
+    muls: int
+    in_bits: int
+    out_bits: int
+
+    @property
+    def work(self) -> int:
+        return self.macs + self.adds + self.muls
+
+
+def _boundary_cut_bits(jaxpr, n_bits: int) -> list[int]:
+    """cut[b] = activation bits that must cross a pipeline boundary placed
+    before top-level eqn ``b`` — every var produced by an earlier eqn and
+    still read at or after ``b`` (or returned). Function inputs are not
+    counted: weights are resident per partition and batch inputs enter at
+    the stage that first reads them."""
+    eqns = jaxpr.eqns
+    n_eqns = len(eqns)
+    produced: dict = {}
+    last_read: dict = {}
+    for e, eqn in enumerate(eqns):
+        for v in eqn.invars:
+            if not isinstance(v, jax.core.Literal) and v in produced:
+                last_read[v] = e
+        for v in eqn.outvars:
+            if not isinstance(v, jax.core.DropVar):
+                produced[v] = e
+                last_read[v] = e
+    for v in jaxpr.outvars:
+        if not isinstance(v, jax.core.Literal) and v in produced:
+            last_read[v] = n_eqns          # live past every boundary
+    diff = [0] * (n_eqns + 2)
+    for v, p in produced.items():
+        live_to = min(last_read[v], n_eqns)
+        if live_to > p:
+            bits = int(np.prod(v.aval.shape, dtype=np.int64)) * n_bits
+            diff[p + 1] += bits
+            diff[live_to + 1] -= bits
+    cut = [0] * (n_eqns + 1)
+    acc = 0
+    for b in range(n_eqns + 1):
+        acc += diff[b]
+        cut[b] = acc
+    cut[0] = 0
+    if n_eqns:
+        cut[n_eqns] = 0
+    return cut
+
+
+def partition(graph: OpGraph, k: int, *, n_bits: int = 32,
+              balance_slack: float = 0.25) -> list[GraphPartition]:
+    """Cut ``graph`` into ``k`` balanced pipeline partitions.
+
+    Boundaries land on top-level equation boundaries (the only executable
+    split points — a scanned layer stack is one uncuttable unit). A first
+    DP finds the best achievable bottleneck (minimal max partition work);
+    a second DP then picks, among all boundary sets whose bottleneck stays
+    within ``1 + balance_slack`` of that optimum, the one moving the
+    fewest activation bits across boundaries. ``k`` is clamped to the
+    number of top-level equations.
+    """
+    if k < 1:
+        raise ValueError(f"need k >= 1 partitions, got {k}")
+    eqns = graph.closed_jaxpr.jaxpr.eqns
+    n_eqns = len(eqns)
+    if n_eqns == 0:
+        return [GraphPartition(idx=0, eqn_start=0, eqn_end=0, nodes=(),
+                               macs=0, adds=0, muls=0, in_bits=0,
+                               out_bits=0)]
+    k = min(k, n_eqns)
+
+    work = [0] * n_eqns
+    for nd in graph.nodes:
+        work[nd.top_eqn] += nd.macs + nd.adds + nd.muls
+    prefix = [0]
+    for w in work:
+        prefix.append(prefix[-1] + w)
+
+    def span(a: int, b: int) -> int:
+        return prefix[b] - prefix[a]
+
+    cut = _boundary_cut_bits(graph.closed_jaxpr.jaxpr, n_bits)
+
+    # DP 1: minimal achievable bottleneck over contiguous k-partitions
+    inf = float("inf")
+    best = [[inf] * (n_eqns + 1) for _ in range(k + 1)]
+    best[0][0] = 0.0
+    for parts in range(1, k + 1):
+        for end in range(parts, n_eqns - (k - parts) + 1):
+            b = inf
+            for start in range(parts - 1, end):
+                if math.isinf(best[parts - 1][start]):
+                    continue
+                b = min(b, max(best[parts - 1][start], span(start, end)))
+            best[parts][end] = b
+    cap = best[k][n_eqns] * (1.0 + balance_slack)
+
+    # DP 2: among <=cap partitionings, minimize total boundary cut bits
+    cost = [[inf] * (n_eqns + 1) for _ in range(k + 1)]
+    back: list[list[int]] = [[-1] * (n_eqns + 1) for _ in range(k + 1)]
+    cost[0][0] = 0.0
+    for parts in range(1, k + 1):
+        for end in range(parts, n_eqns - (k - parts) + 1):
+            for start in range(parts - 1, end):
+                if (math.isinf(cost[parts - 1][start])
+                        or span(start, end) > cap):
+                    continue
+                c = cost[parts - 1][start] + (cut[start] if start else 0)
+                if c < cost[parts][end]:
+                    cost[parts][end] = c
+                    back[parts][end] = start
+    bounds = [n_eqns]
+    for parts in range(k, 0, -1):
+        bounds.append(back[parts][bounds[-1]])
+    bounds = bounds[::-1]
+    assert bounds[0] == 0 and bounds[-1] == n_eqns, bounds
+
+    parts_out: list[GraphPartition] = []
+    for i in range(k):
+        s, e = bounds[i], bounds[i + 1]
+        nodes = tuple(nd.idx for nd in graph.nodes if s <= nd.top_eqn < e)
+        macs = sum(graph.nodes[j].macs for j in nodes)
+        adds = sum(graph.nodes[j].adds for j in nodes)
+        muls = sum(graph.nodes[j].muls for j in nodes)
+        parts_out.append(GraphPartition(
+            idx=i, eqn_start=s, eqn_end=e, nodes=nodes,
+            macs=macs, adds=adds, muls=muls,
+            in_bits=cut[s] if i else 0,
+            out_bits=cut[e] if i < k - 1 else 0))
+    return parts_out
+
+
+# ---------------------------------------------------------------------------
+# the placement
+# ---------------------------------------------------------------------------
+
+
 @dataclasses.dataclass
 class Placement:
     hierarchy: PIMHierarchy
     policy: PlacementPolicy
     node_placements: dict[int, NodePlacement]
     n_subarrays: int
+    curve: str = "rowmajor"                  # chosen tile enumeration
+    tile_order: tuple[int, ...] | None = None  # None == identity
+    partitions: list[GraphPartition] | None = None
 
     @property
     def n_tiles(self) -> int:
@@ -128,18 +314,84 @@ class Placement:
     def area_m2(self) -> float:
         return self.hierarchy.area_m2(self.n_subarrays)
 
+    def physical_subarray(self, alloc: int) -> int:
+        """Allocation index -> physical subarray index: the chosen curve
+        permutes tile visit order within each chip; chip and within-tile
+        order are preserved."""
+        if self.tile_order is None:
+            return alloc
+        h = self.hierarchy
+        chip, rem = divmod(alloc, h.subarrays_per_chip)
+        tile_enum, local = divmod(rem, h.tile.subarrays)
+        return (chip * h.subarrays_per_chip
+                + self.tile_order[tile_enum] * h.tile.subarrays + local)
+
+    def coords(self, alloc: int) -> tuple[int, int, int]:
+        """Allocation index -> explicit (chip, tile, subarray-in-tile)."""
+        return self.hierarchy.locate(self.physical_subarray(alloc))
+
     def home_subarray(self, node_idx: int) -> int | None:
+        """Physical subarray holding the node's first block (its 'home' —
+        where input activations are gathered)."""
         np_ = self.node_placements.get(node_idx)
-        return np_.first_subarray if np_ is not None else None
+        return (self.physical_subarray(np_.first_subarray)
+                if np_ is not None else None)
+
+    def home_coords(self, node_idx: int) -> tuple[int, int, int] | None:
+        np_ = self.node_placements.get(node_idx)
+        return self.coords(np_.first_subarray) if np_ is not None else None
+
+    def iter_blocks(self, node_idx: int,
+                    replica: int | None = None) -> Iterator[PlacedBlock]:
+        """The node's blocks with physical subarray indices and explicit
+        (chip, tile, subarray) coordinates."""
+        np_ = self.node_placements[node_idx]
+        for blk in np_.iter_blocks(self.hierarchy, replica):
+            phys = self.physical_subarray(blk.subarray)
+            chip, tile, local = self.hierarchy.locate(phys)
+            yield dataclasses.replace(blk, subarray=phys, chip=chip,
+                                      tile=tile, local=local)
 
     def signature(self) -> tuple:
-        """Hashable identity of where every block lands — two placements
-        with equal signatures lower to identical compiled programs, so this
-        is the placement component of the program-cache key."""
-        return tuple(sorted(
-            (idx, np_.weight_rows, np_.weight_cols, np_.row_blocks,
-             np_.col_blocks, np_.replicas, np_.first_subarray, np_.shared)
-            for idx, np_ in self.node_placements.items()))
+        """Hashable identity of where every block lands *and* of the
+        machine it lands on — two placements with equal signatures lower
+        to identical compiled programs with identical costs, so this is
+        the placement component of the program-cache key. The hierarchy
+        fingerprint folds in tech and every tile/chip geometry knob
+        (regression: equal block grids on different machines must not
+        collide)."""
+        return (self.hierarchy.fingerprint(), self.curve,
+                tuple(sorted(
+                    (idx, np_.weight_rows, np_.weight_cols, np_.row_blocks,
+                     np_.col_blocks, np_.replicas, np_.first_subarray,
+                     np_.shared)
+                    for idx, np_ in self.node_placements.items())))
+
+
+def node_homes(graph: OpGraph, placement: Placement) -> dict[int, int]:
+    """Physical home subarray per node: placed nodes live where their
+    weights start; eltwise nodes compute at their first producer's
+    peripherals (or subarray 0 when they have no placed ancestor)."""
+    homes: dict[int, int] = {}
+    for node in graph.nodes:
+        home = placement.home_subarray(node.idx)
+        if home is None:
+            home = next((homes[d] for d in node.deps if d in homes), 0)
+        homes[node.idx] = home
+    return homes
+
+
+def _edge_hops(graph: OpGraph, placement: Placement) -> int:
+    homes = node_homes(graph, placement)
+    h = placement.hierarchy
+    return sum(h.hop_count(homes[d], homes[node.idx])
+               for node in graph.nodes for d in node.deps)
+
+
+def total_transfer_hops(graph: OpGraph, placement: Placement) -> int:
+    """Total NoC mesh hops on every producer->consumer activation path —
+    the locality objective the topology-aware packer minimizes."""
+    return _edge_hops(graph, placement)
 
 
 def _replicas_for(node: OpNode, blocks: int, lanes_per_sub: int,
@@ -152,16 +404,44 @@ def _replicas_for(node: OpNode, blocks: int, lanes_per_sub: int,
 
 
 def place(graph: OpGraph, hierarchy: PIMHierarchy,
-          policy: PlacementPolicy | None = None) -> Placement:
-    """Greedy weight-stationary packing in topological node order."""
+          policy: PlacementPolicy | None = None,
+          partitions: list[GraphPartition] | None = None) -> Placement:
+    """Greedy weight-stationary packing in topological node order.
+
+    With ``partitions``, each partition's first block is aligned to a tile
+    boundary (and the sharing shelf reset), so pipeline stages occupy
+    disjoint tile runs. With ``policy.topology == "affinity"`` the packer
+    evaluates the hierarchy's candidate tile curves against the graph's
+    producer->consumer edges and keeps the one with the fewest total mesh
+    hops (ties go to flat row-major).
+    """
     policy = policy or PlacementPolicy()
+    if policy.topology not in ("affinity", "flat"):
+        raise ValueError(f"topology must be 'affinity' or 'flat', "
+                         f"got {policy.topology!r}")
     sub = hierarchy.subarray
     placements: dict[int, NodePlacement] = {}
-    next_free = 0                     # next unallocated subarray index
+    next_free = 0                     # next unallocated subarray (alloc idx)
     open_sub = -1                     # partially-filled shared subarray
     open_free_rows = 0                # whole row-bands left on the shelf
 
+    node_part: dict[int, int] = {}    # node idx -> partition idx
+    if partitions:
+        node_part = {n: p.idx for p in partitions for n in p.nodes}
+    cur_part = -1                     # partition of the last placed node
+
     for node in graph.matmul_like():
+        part = node_part.get(node.idx, cur_part)
+        if (policy.align_partitions and part != cur_part
+                and cur_part >= 0 and next_free > 0):
+            # new pipeline stage: start on a fresh tile, close the shelf
+            # (keyed on the partition transition between *placed* nodes —
+            # a partition whose first graph node is eltwise still aligns
+            # at its first matmul/conv)
+            per_tile = hierarchy.tile.subarrays
+            next_free = math.ceil(next_free / per_tile) * per_tile
+            open_sub, open_free_rows = -1, 0
+        cur_part = part
         k, n = node.weight_shape
         row_blocks = max(1, math.ceil(k / sub.weight_rows))
         col_blocks = max(1, math.ceil(n / sub.weight_cols))
@@ -188,6 +468,21 @@ def place(graph: OpGraph, hierarchy: PIMHierarchy,
             open_sub = next_free
             open_free_rows = sub.weight_rows - k
         next_free += total_blocks
-    return Placement(hierarchy=hierarchy, policy=policy,
-                     node_placements=placements,
-                     n_subarrays=max(1, next_free))
+
+    placement = Placement(hierarchy=hierarchy, policy=policy,
+                          node_placements=placements,
+                          n_subarrays=max(1, next_free),
+                          partitions=list(partitions) if partitions else None)
+    if policy.topology == "affinity" and placement.n_tiles > 1:
+        best_name, best_order, best_hops = "rowmajor", None, None
+        for name, order in curve_candidates(hierarchy.chip).items():
+            placement.curve = name
+            placement.tile_order = None if name == "rowmajor" else order
+            hops = _edge_hops(graph, placement)
+            if best_hops is None or hops < best_hops or (
+                    hops == best_hops and name == "rowmajor"):
+                best_name, best_order, best_hops = (
+                    name, placement.tile_order, hops)
+        placement.curve = best_name
+        placement.tile_order = best_order
+    return placement

@@ -19,6 +19,15 @@ set's compute, so stage latency is ``max(compute, transfer)`` and the
 uncovered remainder is reported as stall time. Eltwise stages run in the
 shared peripheral FP units at the estimator's ``max(T_add, T_mul)`` cycle.
 
+``ScheduleReport.latency_s`` remains the end-to-end time of ONE activation
+set — the quantity ``reconcile()`` bounds against ``pim_estimate``. The
+steady-state story the architecture exists for (weights resident,
+activations streaming) lives in :meth:`Schedule.pipeline`: a microbatch
+timeline over K pipeline partitions with explicit fill/drain, a
+steady-state interval bounded below by both the slowest partition and the
+busiest shared link (per-link contention over the bus/NoC/SerDes edges
+each boundary transfer crosses), and the pipelined-vs-sequential speedup.
+
 ``ScheduleReport`` totals (MACs/adds/muls, unit energies) are the graph
 totals — identical to ``count_ops`` on the same fn — plus explicit
 data-movement energy the aggregate model omits.
@@ -51,6 +60,8 @@ class StageCost:
     t_stage_s: float          # max(compute, transfer) — double buffered
     e_compute_j: float
     e_transfer_j: float
+    hops: int                 # NoC mesh hops on this stage's input paths
+    partition: int = 0        # pipeline partition this stage belongs to
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +78,7 @@ class ScheduleReport:
     pipeline_interval_s: float    # max stage latency (steady-state rate)
     stall_s: float                # transfer time not hidden by compute
     transfer_energy_j: float
+    total_hops: int               # sum of NoC hops over all stage inputs
     n_stages: int
     n_subarrays: int
     n_tiles: int
@@ -81,7 +93,72 @@ class ScheduleReport:
                 f"T={self.latency_s:.3e} s (ideal {self.ideal_latency_s:.3e}, "
                 f"stall {self.stall_s:.3e}) interval="
                 f"{self.pipeline_interval_s:.3e} s E={self.energy_j:.3e} J "
+                f"hops={self.total_hops} "
                 f"area={self.area_m2 * 1e6:.2f} mm^2")
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionCost:
+    """Rolled-up cost of one pipeline partition (contiguous stage run)."""
+
+    idx: int
+    n_stages: int
+    macs: int
+    adds: int
+    muls: int
+    t_compute_s: float            # sum of member stage latencies
+    t_boundary_s: float           # handoff to the next partition
+                                  # (diagnostic: already overlapped inside
+                                  # the consumer stages' t_stage_s)
+    out_bits: int
+
+    @property
+    def work(self) -> int:
+        return self.macs + self.adds + self.muls
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineTimeline:
+    """Microbatch fill/steady/drain timeline over pipeline partitions.
+
+    ``interval_s`` is the steady-state initiation interval: a new
+    microbatch completes every interval once the pipe is full, bounded
+    below by the slowest partition's occupancy AND by the busiest shared
+    link's per-microbatch busy time (several boundary streams crossing the
+    same bus/NoC edge/SerDes link serialize there). ``makespan_s`` is the
+    full M-microbatch time including fill and drain; ``sequential_s`` is
+    the same M activation sets run unpipelined back to back.
+    """
+
+    microbatches: int
+    partitions: tuple[PartitionCost, ...]
+    interval_s: float
+    fill_s: float                 # first microbatch end-to-end
+    makespan_s: float
+    sequential_s: float
+    link_busy_s: float            # busiest shared link, per microbatch
+    bottleneck: str               # "partition:<idx>" or "link:<repr>"
+
+    @property
+    def n_partitions(self) -> int:
+        return len(self.partitions)
+
+    @property
+    def speedup(self) -> float:
+        return (self.sequential_s / self.makespan_s
+                if self.makespan_s else 1.0)
+
+    @property
+    def steady_sets_per_s(self) -> float:
+        """Activation sets (microbatches) retired per second, steady state."""
+        return 1.0 / self.interval_s if self.interval_s else math.inf
+
+    def summary(self) -> str:
+        return (f"{self.n_partitions} partitions x "
+                f"{self.microbatches} microbatches: interval="
+                f"{self.interval_s:.3e} s (bottleneck {self.bottleneck}) "
+                f"fill={self.fill_s:.3e} s makespan={self.makespan_s:.3e} s "
+                f"speedup={self.speedup:.2f}x vs sequential")
 
 
 @dataclasses.dataclass
@@ -91,6 +168,10 @@ class Schedule:
     hierarchy: PIMHierarchy
     stages: list[StageCost]
     report: ScheduleReport
+
+    @property
+    def partitions(self) -> list[placement_mod.GraphPartition] | None:
+        return self.placement.partitions
 
     def reconcile(self) -> dict:
         """Check the ScheduleReport against ``pim_estimate`` on the same fn:
@@ -115,6 +196,87 @@ class Schedule:
                                     if ideal.latency_s else math.inf),
         }
 
+    def pipeline(self, microbatches: int = 8,
+                 partitions: int | None = None) -> PipelineTimeline:
+        """Microbatch pipeline timeline over this schedule's partitions.
+
+        Uses the partitions the schedule was built with; pass
+        ``partitions=K`` to (re)cut on the fly. With one partition the
+        timeline degenerates to sequential execution (speedup 1.0)."""
+        parts = self.partitions
+        if partitions is not None:
+            parts = placement_mod.partition(self.graph, partitions)
+        if not parts:
+            parts = placement_mod.partition(self.graph, 1)
+        if microbatches < 1:
+            raise ValueError(f"need >= 1 microbatches, got {microbatches}")
+        node_part = {n: p.idx for p in parts for n in p.nodes}
+        # roll stages up per partition (stages of unassigned nodes — when
+        # the schedule was cut differently — fall into partition 0)
+        agg = {p.idx: dict(n=0, macs=0, adds=0, muls=0, t=0.0)
+               for p in parts}
+        for s in self.stages:
+            a = agg[node_part.get(s.node, 0)]
+            a["n"] += 1
+            a["macs"] += s.macs
+            a["adds"] += s.adds
+            a["muls"] += s.muls
+            a["t"] += s.t_stage_s
+
+        homes = placement_mod.node_homes(self.graph, self.placement)
+        link_busy: dict[tuple, float] = {}
+
+        # per-microbatch link occupancy: every stage's input transfers.
+        # These ARE the activation streams (boundary-crossing edges
+        # included), and each consumer stage's t_stage_s already absorbs
+        # its own transfer double-buffered — so the explicit boundary
+        # stream below is diagnostic only, never charged a second time.
+        for s in self.stages:
+            node = self.graph.nodes[s.node]
+            for d in node.deps:
+                dep = self.graph.nodes[d]
+                bits = (dep.out_elems * dep.repeat
+                        * self.hierarchy.subarray.n_bits)
+                if bits:
+                    for link in self.hierarchy.route_links(homes[d],
+                                                           homes[s.node]):
+                        link_busy[link] = (
+                            link_busy.get(link, 0.0)
+                            + self.hierarchy.link_time(link, bits))
+        pcosts: list[PartitionCost] = []
+        for i, p in enumerate(parts):
+            t_boundary = 0.0
+            if i < len(parts) - 1 and p.out_bits:
+                nxt = parts[i + 1]
+                src = homes[p.nodes[-1]] if p.nodes else 0
+                dst = homes[nxt.nodes[0]] if nxt.nodes else 0
+                t_boundary, _ = self.hierarchy.transfer_cost(
+                    p.out_bits, src, dst)
+            a = agg[p.idx]
+            pcosts.append(PartitionCost(
+                idx=p.idx, n_stages=a["n"], macs=a["macs"], adds=a["adds"],
+                muls=a["muls"], t_compute_s=a["t"],
+                t_boundary_s=t_boundary, out_bits=p.out_bits))
+
+        busiest_link = max(link_busy.items(), key=lambda kv: kv[1],
+                           default=(None, 0.0))
+        slowest = max(pcosts, key=lambda p: p.t_compute_s)
+        interval = max(slowest.t_compute_s, busiest_link[1])
+        bottleneck = (f"partition:{slowest.idx}"
+                      if slowest.t_compute_s >= busiest_link[1]
+                      else f"link:{busiest_link[0]}")
+        # first microbatch end-to-end == the one-activation-set latency
+        # (partition handoffs are the stages' own double-buffered input
+        # transfers, already inside t_stage_s)
+        fill = self.report.latency_s
+        makespan = fill + (microbatches - 1) * interval
+        sequential = microbatches * self.report.latency_s
+        return PipelineTimeline(
+            microbatches=microbatches, partitions=tuple(pcosts),
+            interval_s=interval, fill_s=fill, makespan_s=makespan,
+            sequential_s=sequential, link_busy_s=busiest_link[1],
+            bottleneck=bottleneck)
+
 
 def _ideal_report(counts, tech: str, weight_bits: int):
     """pim_estimate with its own default lane provisioning (one 1024-lane
@@ -133,9 +295,12 @@ def build_schedule_from_graph(
         graph: graph_mod.OpGraph,
         hierarchy: PIMHierarchy | None = None,
         policy: placement_mod.PlacementPolicy | None = None,
-        tech: str = "proposed") -> Schedule:
+        tech: str = "proposed",
+        partitions: int | None = None) -> Schedule:
     hierarchy = hierarchy or default_hierarchy(tech)
-    place = placement_mod.place(graph, hierarchy, policy)
+    parts = (placement_mod.partition(graph, partitions)
+             if partitions else None)
+    place = placement_mod.place(graph, hierarchy, policy, partitions=parts)
     sub = hierarchy.subarray
     n_bits = sub.n_bits
     counts = graph.totals()
@@ -143,16 +308,12 @@ def build_schedule_from_graph(
     chip_lanes = _chip_lanes(ideal)
     t_elem = max(sub.t_add_s, sub.t_mul_s)
 
-    # home subarray per node: placed nodes live where their weights are;
-    # eltwise nodes compute at their first producer's peripherals.
-    homes: dict[int, int] = {}
+    node_part = ({n: p.idx for p in parts for n in p.nodes}
+                 if parts else {})
+    homes = placement_mod.node_homes(graph, place)
     stages: list[StageCost] = []
     for node in graph.nodes:
-        home = place.home_subarray(node.idx)
-        if home is None:
-            home = next((homes[d] for d in node.deps if d in homes), 0)
-        homes[node.idx] = home
-
+        home = homes[node.idx]
         if node.kind == "eltwise":
             lanes = min(chip_lanes, sub.mac_lanes)
             work = node.adds + node.muls
@@ -164,19 +325,21 @@ def build_schedule_from_graph(
             t_compute = math.ceil(node.macs / lanes) * sub.t_mac_s
             e_compute = node.macs * sub.e_mac_j
 
-        t_xfer, e_xfer = 0.0, 0.0
+        t_xfer, e_xfer, hops = 0.0, 0.0, 0
         for d in node.deps:
             dep = graph.nodes[d]
             bits = dep.out_elems * dep.repeat * n_bits
             t, e = hierarchy.transfer_cost(bits, homes[d], home)
             t_xfer += t
             e_xfer += e
+            hops += hierarchy.hop_count(homes[d], home) if bits else 0
         stages.append(StageCost(
             node=node.idx, name=node.name, kind=node.kind,
             macs=node.macs, adds=node.adds, muls=node.muls, lanes=lanes,
             t_compute_s=t_compute, t_transfer_s=t_xfer,
             t_stage_s=max(t_compute, t_xfer),
-            e_compute_j=e_compute, e_transfer_j=e_xfer))
+            e_compute_j=e_compute, e_transfer_j=e_xfer, hops=hops,
+            partition=node_part.get(node.idx, 0)))
 
     latency = sum(s.t_stage_s for s in stages)
     stall = sum(max(0.0, s.t_transfer_s - s.t_compute_s) for s in stages)
@@ -190,6 +353,7 @@ def build_schedule_from_graph(
         pipeline_interval_s=max((s.t_stage_s for s in stages), default=0.0),
         stall_s=stall,
         transfer_energy_j=e_xfer_total,
+        total_hops=sum(s.hops for s in stages),
         n_stages=len(stages),
         n_subarrays=place.n_subarrays,
         n_tiles=place.n_tiles,
@@ -204,9 +368,13 @@ def build_schedule_from_graph(
 def build_schedule(fn: Callable, *args,
                    hierarchy: PIMHierarchy | None = None,
                    policy: placement_mod.PlacementPolicy | None = None,
-                   tech: str = "proposed", **kwargs) -> Schedule:
+                   tech: str = "proposed",
+                   partitions: int | None = None, **kwargs) -> Schedule:
     """Compile ``fn(*args, **kwargs)`` into a placed, cost-rolled static
-    schedule (args may be ShapeDtypeStructs; nothing is allocated)."""
+    schedule (args may be ShapeDtypeStructs; nothing is allocated).
+    ``partitions=K`` additionally cuts the graph into K pipeline
+    partitions, aligns their placements to tile boundaries, and enables
+    :meth:`Schedule.pipeline` / partitioned compilation."""
     g = graph_mod.build_graph(fn, *args, **kwargs)
     return build_schedule_from_graph(g, hierarchy=hierarchy, policy=policy,
-                                     tech=tech)
+                                     tech=tech, partitions=partitions)

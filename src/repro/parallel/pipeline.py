@@ -1,32 +1,45 @@
-"""GPipe-style pipeline parallelism over the "pod" axis via shard_map.
+"""GPipe-style pipeline parallelism: shard_map stages and PIM partitions.
 
-At 1000+ nodes the pod axis can carry pipeline stages instead of pure data
-parallelism: each pod holds a contiguous slice of the layer stack and
-microbatches stream through with ``collective_permute`` handoffs. This
-module implements the schedule as an explicit shard_map program (GSPMD
-cannot derive pipelining automatically).
+Two pipelining substrates share this module's GPipe schedule (classic
+fill-drain over M microbatches and P stages — T = M + P - 1 ticks; at
+tick t, stage s processes microbatch (t - s) when 0 <= t - s < M; bubble
+fraction = (P-1)/(M+P-1)):
 
-Schedule: classic GPipe fill-drain over M microbatches and P stages —
-T = M + P - 1 ticks; at tick t, stage s processes microbatch (t - s) when
-0 <= t - s < M. Bubble fraction = (P-1)/(M+P-1).
+  * **device pipelining** (``pipeline_forward`` / ``make_pipelined_fn``):
+    the pod axis carries pipeline stages; each device holds a contiguous
+    slice of the layer stack and microbatches stream through
+    ``collective_permute`` handoffs, as an explicit shard_map program
+    (GSPMD cannot derive pipelining automatically). The layer stack must
+    be stacked per-stage: params leaves shaped [P, layers_per_stage, ...]
+    with the leading P dim sharded over the pipe axis.
+  * **PIM partition pipelining** (``gpipe_grid`` / ``run_partitioned`` /
+    ``gpipe_value_and_grad``): the stages are the per-partition programs
+    of ``repro.mapper.compile.compile_partitioned`` — weight blocks stay
+    resident on their tiles and activation sets stream through the
+    explicit transfer points. The forward driver walks the GPipe grid;
+    training differentiates *per stage* with ``jax.vjp`` (forward ticks
+    stash pullbacks, backward ticks run them in reverse grid order,
+    accumulating boundary cotangents stage-to-stage and argument
+    cotangents across microbatches) — real GPipe, not grad-of-a-replay.
+    Microbatch means over equal slices reproduce full-batch mean losses
+    and gradients to fp32 tolerance, which is what lets
+    ``Trainer(backend="pim", microbatches=M, partitions=K)`` match the
+    jit backend.
 
-The layer stack must be stacked per-stage: params leaves shaped
-[P, layers_per_stage, ...] with the leading P dim sharded over the pipe
-axis. ``pipeline_forward`` runs inside shard_map: each device sees its
-own stage's params slice and exchanges activations with
-``collective_permute``.
-
-Correctness: tests/test_pipeline.py checks a 2-stage x 4-microbatch run
-against the unpipelined reference on a forced 8-device host mesh.
+Correctness: tests/test_pipeline.py checks a 2-stage x 4-microbatch
+shard_map run against the unpipelined reference on a forced 8-device
+host mesh; tests/test_partition.py checks the PIM partition drivers
+against ``jax.jit`` of the unpartitioned step.
 """
 
 from __future__ import annotations
 
 from functools import partial
-from typing import Callable
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.parallel._compat import pcast_varying, shard_map
@@ -80,6 +93,119 @@ def pipeline_forward(x, stage_params, stage_fn: Callable, *, axis: str,
     is_last = (stage == n_stages - 1).astype(outputs.dtype)
     outputs = jax.lax.psum(outputs * is_last, axis)
     return outputs
+
+
+# ---------------------------------------------------------------------------
+# GPipe drivers over PIM partition stage programs
+# ---------------------------------------------------------------------------
+
+
+def gpipe_grid(n_stages: int, n_micro: int):
+    """Yield ``(tick, stage, microbatch)`` in GPipe fill-drain order."""
+    for t in range(n_micro + n_stages - 1):
+        for s in range(n_stages):
+            m = t - s
+            if 0 <= m < n_micro:
+                yield t, s, m
+
+
+def _resolve(ref, flat_args, stage_outs):
+    if ref[0] == "arg":
+        return flat_args[ref[1]]
+    if ref[0] == "stage":
+        return stage_outs[ref[1]][ref[2]]
+    return ref[1]                              # ("lit", val)
+
+
+def run_partitioned(stages: Sequence, out_refs: Sequence,
+                    flat_args_per_mb: Sequence[Sequence]) -> list[list]:
+    """Stream M microbatches through the partition stage programs in GPipe
+    fill-drain order; returns each microbatch's flat outputs.
+
+    ``stages`` are ``StageProgram``-shaped objects (``fn``, ``in_refs``);
+    ``flat_args_per_mb[m]`` is microbatch m's flat argument list (from
+    ``PartitionedProgram.flatten_args``). Microbatches are independent
+    activation sets, so the interleaving cannot change numerics — each
+    output equals the stages composed sequentially on that microbatch.
+    """
+    n_micro = len(flat_args_per_mb)
+    outs = [[None] * len(stages) for _ in range(n_micro)]
+    for _, s, m in gpipe_grid(len(stages), n_micro):
+        ins = [_resolve(r, flat_args_per_mb[m], outs[m])
+               for r in stages[s].in_refs]
+        run = getattr(stages[s], "jitted", None) or stages[s].fn
+        outs[m][s] = run(*ins)
+    return [[_resolve(r, flat_args_per_mb[m], outs[m]) for r in out_refs]
+            for m in range(n_micro)]
+
+
+def _zero_cot(x):
+    """A zero cotangent for one primal output (float0 for int/bool)."""
+    if jnp.issubdtype(jnp.result_type(x), jnp.inexact):
+        return jnp.zeros_like(x)
+    return np.zeros(jnp.shape(x), dtype=jax.dtypes.float0)
+
+
+def _acc(a, b):
+    if b is None or (hasattr(b, "dtype") and b.dtype == jax.dtypes.float0):
+        return a
+    return b if a is None else a + b
+
+
+def gpipe_value_and_grad(stages: Sequence, loss_ref: tuple,
+                         flat_args_per_mb: Sequence[Sequence],
+                         grad_argnums: Sequence[int]):
+    """GPipe forward/backward over partition stage programs.
+
+    Forward ticks run ``jax.vjp`` per (microbatch, stage) and stash the
+    pullbacks; backward ticks walk the grid in reverse, feeding each
+    stage's output cotangents (seeded with 1/M at the loss, accumulated
+    from downstream consumers elsewhere) through its pullback and
+    scattering the input cotangents to producer stages and to the global
+    argument gradient accumulators.
+
+    Returns ``(mean_loss, grads)`` where ``grads[i]`` is the cotangent sum
+    for flat argument ``grad_argnums[i]`` — the gradient of the
+    microbatch-mean loss, which for an equal split of a mean loss matches
+    the full-batch gradient to fp32 tolerance.
+    """
+    if loss_ref[0] != "stage":
+        raise ValueError(f"loss does not depend on any stage: {loss_ref}")
+    n_micro = len(flat_args_per_mb)
+    n_stages = len(stages)
+    grid = list(gpipe_grid(n_stages, n_micro))
+    outs = [[None] * n_stages for _ in range(n_micro)]
+    pullbacks = [[None] * n_stages for _ in range(n_micro)]
+    for _, s, m in grid:
+        ins = [_resolve(r, flat_args_per_mb[m], outs[m])
+               for r in stages[s].in_refs]
+        outs[m][s], pullbacks[m][s] = jax.vjp(stages[s].fn, *ins)
+
+    ls, lj = loss_ref[1], loss_ref[2]
+    losses = [outs[m][ls][lj] for m in range(n_micro)]
+    mean_loss = sum(losses) / n_micro
+
+    # out_cots[m][s][j]: cotangent for stage s's j-th output, microbatch m
+    out_cots = [[[None] * len(outs[m][s]) for s in range(n_stages)]
+                for m in range(n_micro)]
+    for m in range(n_micro):
+        seed = jnp.ones_like(losses[m]) / n_micro
+        out_cots[m][ls][lj] = _acc(out_cots[m][ls][lj], seed)
+    grads: dict[int, Any] = {i: None for i in grad_argnums}
+    for _, s, m in reversed(grid):
+        cots = tuple(c if c is not None else _zero_cot(x)
+                     for c, x in zip(out_cots[m][s], outs[m][s]))
+        in_cots = pullbacks[m][s](cots)
+        for ref, c in zip(stages[s].in_refs, in_cots):
+            if ref[0] == "stage":
+                _, r, j = ref
+                out_cots[m][r][j] = _acc(out_cots[m][r][j], c)
+            elif ref[0] == "arg" and ref[1] in grads:
+                grads[ref[1]] = _acc(grads[ref[1]], c)
+    grad_list = [grads[i] if grads[i] is not None
+                 else jnp.zeros_like(flat_args_per_mb[0][i])
+                 for i in grad_argnums]
+    return mean_loss, grad_list
 
 
 def make_pipelined_fn(stage_fn: Callable, mesh: Mesh, *, axis: str = "pod",

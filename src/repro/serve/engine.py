@@ -41,11 +41,20 @@ class Request:
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, *, batch: int = 4,
                  max_len: int = 128, sample: Callable | None = None,
-                 backend: str = "jit", pim_tech: str = "proposed"):
+                 backend: str = "jit", pim_tech: str = "proposed",
+                 partitions: int = 1, microbatches: int = 8):
         """``backend="jit"`` jits the decode step; ``backend="pim"`` maps
         it onto the PIM hierarchy and decodes through the compiled
         schedule (``repro.mapper.compile``) — placed matmuls run as
-        blocked ``pim_matmul`` calls per resident weight block."""
+        blocked ``pim_matmul`` calls per resident weight block.
+
+        ``partitions=K`` (pim backend only) compiles the decode step as K
+        pipeline partition programs with explicit transfer points and
+        decodes through them (token-identical to the unpartitioned
+        program: same equations, same order). ``microbatches`` sets the
+        streaming depth of the modeled microbatch timeline exposed as
+        ``self.pipeline_timeline`` (steady-state decode throughput of the
+        partitioned plan — ``Schedule.pipeline``)."""
         self.cfg = cfg
         self.model: DecoderLM = build_model(cfg)
         self.params = params
@@ -53,11 +62,16 @@ class ServeEngine:
         self.max_len = max_len
         self.backend = backend
         self.cache = self.model.init_cache(batch, max_len)
-        self.pos = np.zeros(batch, np.int32)        # per-slot next position
         self.slots: list[Request | None] = [None] * batch
         self.queue: deque[Request] = deque()
         self.sample = sample or (lambda logits: jnp.argmax(logits, -1))
         self.pim_program = None
+        self.pipeline_timeline = None
+        if partitions < 1 or microbatches < 1:
+            raise ValueError("partitions and microbatches must be >= 1")
+        if partitions > 1 and backend != "pim":
+            raise ValueError("partitions require backend='pim' (the jit "
+                             "backend has no partitioned plan)")
         if backend == "jit":
             self._decode = jax.jit(self._decode_impl)
         elif backend == "pim":
@@ -66,12 +80,18 @@ class ServeEngine:
                 self._decode_impl, mapper.abstract_like(params),
                 mapper.abstract_like(self.cache),
                 jax.ShapeDtypeStruct((batch,), jnp.int32),
-                jax.ShapeDtypeStruct((), jnp.int32), tech=pim_tech)
+                jax.ShapeDtypeStruct((), jnp.int32), tech=pim_tech,
+                partitions=partitions if partitions > 1 else None)
             # use_cache=False: the cache keys on fn identity and this is
             # a bound method — per-engine keys would never hit but would
             # pin the engine (params, KV cache) in the global cache
-            self.pim_program = mapper.compile_schedule(sched,
-                                                       use_cache=False)
+            if partitions > 1:
+                self.pim_program = mapper.compile_partitioned(
+                    sched, use_cache=False)
+                self.pipeline_timeline = sched.pipeline(microbatches)
+            else:
+                self.pim_program = mapper.compile_schedule(sched,
+                                                           use_cache=False)
             self._decode = self.pim_program
         else:
             raise ValueError(f"backend must be 'jit' or 'pim', "

@@ -46,7 +46,9 @@ class Trainer:
                  init_state: Callable[[], tuple[Any, Any]],
                  batch_fn: Callable[[int], Any],
                  jit_kwargs: dict | None = None,
-                 backend: str = "jit", pim_tech: str = "proposed"):
+                 backend: str = "jit", pim_tech: str = "proposed",
+                 microbatches: int = 1, partitions: int = 1,
+                 loss_fn: Callable | None = None, optimizer=None):
         """``train_step(params, opt_state, batch) -> (params, opt, loss)``;
         ``init_state()`` builds fresh (params, opt_state);
         ``batch_fn(step)`` is the stateless data pipeline.
@@ -56,24 +58,46 @@ class Trainer:
         hierarchy and runs the *compiled schedule* — every placed matmul
         executes as blocked ``pim_matmul`` calls per resident weight
         block (see ``repro.mapper.compile``). The placed schedule is
-        exposed as ``self.pim_program.schedule``."""
+        exposed as ``self.pim_program.schedule``.
+
+        ``microbatches=M`` / ``partitions=K`` (pim backend only) run the
+        *partitioned pipeline plan*: the loss graph is cut into K pipeline
+        partitions compiled one program each, the batch is split into M
+        equal microbatches, and each step streams them through the stage
+        programs with GPipe fill-drain, differentiating per stage
+        (``repro.parallel.pipeline.gpipe_value_and_grad``) and applying
+        one optimizer update on the microbatch-mean gradients. Requires
+        ``loss_fn(params, *batch) -> scalar mean loss`` and an
+        ``optimizer`` with ``update(grads, opt_state, params)`` (the
+        opaque ``train_step`` cannot be split); losses match the jit
+        backend to fp32 tolerance because a mean over equal microbatch
+        means is the full-batch mean."""
         self.cfg = cfg
         self.batch_fn = batch_fn
         self.backend = backend
+        self.microbatches = microbatches
+        self.partitions = partitions
         self.ckpt = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep,
                                       async_save=cfg.async_ckpt)
         self.straggler = StragglerPolicy()
         self.heartbeat = HeartbeatMonitor()
         self.pim_program = None
+        if microbatches < 1 or partitions < 1:
+            raise ValueError("microbatches and partitions must be >= 1")
+        pipelined = microbatches > 1 or partitions > 1
+        if pipelined and backend != "pim":
+            raise ValueError(
+                "microbatches/partitions require backend='pim' (the jit "
+                "backend has no partitioned plan to pipeline)")
 
         params, opt_state = init_state()
+        if backend != "jit" and jit_kwargs:
+            raise ValueError(
+                "jit_kwargs only apply to backend='jit'; the pim "
+                "backend jits the compiled schedule itself")
         if backend == "jit":
             self._step_fn = jax.jit(train_step, **(jit_kwargs or {}))
-        elif backend == "pim":
-            if jit_kwargs:
-                raise ValueError(
-                    "jit_kwargs only apply to backend='jit'; the pim "
-                    "backend jits the compiled schedule itself")
+        elif backend == "pim" and not pipelined:
             from repro import mapper
             sched = mapper.build_schedule(train_step, params, opt_state,
                                           batch_fn(0), tech=pim_tech)
@@ -83,6 +107,9 @@ class Trainer:
             self.pim_program = mapper.compile_schedule(sched,
                                                        use_cache=False)
             self._step_fn = self.pim_program
+        elif backend == "pim":
+            self._step_fn = self._build_pipelined_step(
+                params, batch_fn(0), loss_fn, optimizer, pim_tech)
         else:
             raise ValueError(f"backend must be 'jit' or 'pim', "
                              f"got {backend!r}")
@@ -98,6 +125,63 @@ class Trainer:
         self.params = params
         self.opt_state = opt_state
         self.losses: list[float] = []
+
+    def _build_pipelined_step(self, params, batch0, loss_fn, optimizer,
+                              pim_tech: str) -> Callable:
+        """Compile the partitioned microbatch-pipeline step (see
+        ``__init__``). Traces ``loss_fn`` at microbatch shape, cuts it
+        into ``self.partitions`` stage programs, and returns a jitted
+        ``step(params, opt_state, batch)`` that GPipe-streams the
+        microbatches and applies one update on the mean gradients."""
+        if loss_fn is None or optimizer is None:
+            raise ValueError(
+                "microbatches/partitions need loss_fn and optimizer: an "
+                "opaque train_step cannot be cut into pipeline stages")
+        from repro import mapper
+        from repro.parallel import pipeline as pipe_mod
+
+        n_micro = self.microbatches
+        leaves = jax.tree.leaves(batch0)
+        if not leaves:
+            raise ValueError("batch_fn(0) returned an empty batch")
+        batch_dim = int(np.shape(leaves[0])[0])
+        if any(int(np.shape(x)[0]) != batch_dim for x in leaves):
+            raise ValueError("all batch leaves must share the leading "
+                             "(batch) axis to be microbatched")
+        if batch_dim % n_micro:
+            raise ValueError(f"batch size {batch_dim} is not divisible "
+                             f"into {n_micro} microbatches")
+        mb = batch_dim // n_micro
+
+        def slice_mb(batch, m):
+            return jax.tree.map(lambda a: a[m * mb:(m + 1) * mb], batch)
+
+        mb_abstract = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct((mb,) + np.shape(a)[1:],
+                                           np.asarray(a).dtype),
+            batch0)
+        sched = mapper.build_schedule(
+            loss_fn, mapper.abstract_like(params), *mb_abstract,
+            tech=pim_tech, partitions=self.partitions)
+        # use_cache=False for the same pinning reason as the whole-step
+        # path: per-instance params would live in the global cache forever
+        prog = mapper.compile_partitioned(sched, use_cache=False)
+        self.pim_program = prog
+        loss_ref = prog.out_refs[0]
+        n_param_leaves = len(jax.tree.leaves(params))
+        params_treedef = jax.tree.structure(params)
+
+        def step(params, opt_state, batch):
+            flat_per_mb = [prog.flatten_args(params, *slice_mb(batch, m))
+                           for m in range(n_micro)]
+            loss, grad_flat = pipe_mod.gpipe_value_and_grad(
+                prog.stages, loss_ref, flat_per_mb,
+                list(range(n_param_leaves)))
+            grads = jax.tree.unflatten(params_treedef, grad_flat)
+            params, opt_state = optimizer.update(grads, opt_state, params)
+            return params, opt_state, loss
+
+        return jax.jit(step)
 
     def run(self) -> dict:
         cfg = self.cfg
