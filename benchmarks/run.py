@@ -26,6 +26,7 @@ MODULES = (
     "mapper_bench",
     "executor_bench",
     "pipeline_bench",
+    "serve_bench",
 )
 
 

@@ -1,0 +1,158 @@
+"""Paged-vs-contiguous serving throughput and KV bytes moved
+(beyond-paper).
+
+Drives the llama3-8b smoke config through four serving stacks on a
+shared-prefix workload (every request extends one common prompt prefix —
+the chat-system-prompt shape paged caches exist for):
+
+  * ``contiguous_1``   — 1 ``ServeEngine``, contiguous max_len lanes
+  * ``paged_1``        — 1 paged engine (block tables + prefix sharing)
+  * ``contiguous_2``   — ``Router`` over 2 contiguous engines
+  * ``paged_router_2`` — ``Router`` over 2 paged engines with prefix
+                         affinity (each engine's prefix warmed first)
+
+Records aggregate generated tokens/s and the per-variant KV bytes moved
+(contiguous lanes stream their full provisioned length every tick; paged
+reads stop at each slot's allocated blocks) to ``BENCH_serve.json``.
+
+Acceptance bar (CI gate): the 2-engine paged router must deliver
+>= 1.3x the contiguous single engine's aggregate throughput — prefix
+sharing skips the replayed prompt ticks, so falling below means the
+paged path or the router regressed.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+PREFIX_LEN = 24
+SUFFIX_LEN = 2
+GEN_TOKENS = 8
+N_REQUESTS = 12
+BATCH = 4
+BLOCK_SIZE = 8
+THROUGHPUT_BAR = 1.3
+
+_OUT = pathlib.Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+
+
+def _workload(cfg, rng):
+    prefix = rng.integers(0, cfg.vocab_size, PREFIX_LEN, dtype=np.int32)
+    prompts = []
+    for _ in range(N_REQUESTS):
+        tail = rng.integers(0, cfg.vocab_size, SUFFIX_LEN, dtype=np.int32)
+        prompts.append(np.concatenate([prefix, tail]))
+    return prefix, prompts
+
+
+def _prime(target, prefix):
+    """Warm one engine: compiles the decode step and fills the prefix
+    blocks so the measured requests hit the cache (the steady-state
+    serving condition)."""
+    from repro.serve import Request
+    target.submit(Request(rid=-1, prompt=prefix, max_tokens=1))
+    target.run()
+
+
+def _measure(target, prompts) -> dict:
+    # fresh Request objects per variant: the engine mutates out/done, so
+    # sharing them across variants would both end later runs after one
+    # token and credit them with earlier variants' output
+    from repro.serve import Request
+    reqs = [Request(rid=i, prompt=p, max_tokens=GEN_TOKENS)
+            for i, p in enumerate(prompts)]
+    base_tokens = sum(len(r.out) for r in target.completed)
+    base_read, base_written = target.kv_bytes_read, target.kv_bytes_written
+    t0 = time.perf_counter()
+    for r in reqs:
+        target.submit(r)
+    done = target.run()
+    dt = time.perf_counter() - t0
+    tokens = sum(len(r.out) for r in done) - base_tokens
+    return {
+        "requests": len(reqs),
+        "generated_tokens": tokens,
+        "wall_s": dt,
+        "tokens_per_s": tokens / dt,
+        "kv_bytes_read": target.kv_bytes_read - base_read,
+        "kv_bytes_written": target.kv_bytes_written - base_written,
+        "prefix_skipped_tokens": getattr(target, "prefix_skipped_tokens", 0),
+    }
+
+
+def run() -> list[str]:
+    from repro import configs
+    from repro.models.transformer import init_params
+    from repro.serve import Router, ServeEngine
+
+    cfg = configs.get_smoke_config("llama3-8b")
+    params = init_params(cfg, seed=0)
+    rng = np.random.default_rng(0)
+    prefix, prompts = _workload(cfg, rng)
+
+    # contiguous engines need lanes for the whole shared-tick run:
+    # ceil(N/B) waves x (prompt + gen) ticks all advance one shared pos
+    waves = -(-N_REQUESTS // BATCH)
+    cont_len = (waves + 1) * (PREFIX_LEN + SUFFIX_LEN + GEN_TOKENS) + 8
+    paged_len = PREFIX_LEN + SUFFIX_LEN + GEN_TOKENS + BLOCK_SIZE
+
+    def contiguous(n):
+        mk = lambda: ServeEngine(cfg, params, batch=BATCH, max_len=cont_len)
+        target = mk() if n == 1 else Router([mk() for _ in range(n)])
+        engines = [target] if n == 1 else target.engines
+        for e in engines:
+            _prime(e, prefix)
+        return target
+
+    def paged(n):
+        mk = lambda: ServeEngine(cfg, params, batch=BATCH,
+                                 max_len=paged_len, paged=True,
+                                 kv_block_size=BLOCK_SIZE)
+        target = mk() if n == 1 else Router([mk() for _ in range(n)])
+        engines = [target] if n == 1 else target.engines
+        for e in engines:
+            _prime(e, prefix)
+        return target
+
+    results = {
+        "contiguous_1": _measure(contiguous(1), prompts),
+        "paged_1": _measure(paged(1), prompts),
+        "contiguous_2": _measure(contiguous(2), prompts),
+        "paged_router_2": _measure(paged(2), prompts),
+    }
+    base = results["contiguous_1"]["tokens_per_s"]
+    for r in results.values():
+        r["speedup_vs_contiguous_1"] = r["tokens_per_s"] / base
+        for k in ("kv_bytes_read", "kv_bytes_written"):
+            r[f"{k}_vs_contiguous_1"] = (
+                r[k] / max(1, results["contiguous_1"][k]))
+
+    _OUT.write_text(json.dumps(results, indent=2, sort_keys=True) + "\n")
+
+    gate = results["paged_router_2"]["speedup_vs_contiguous_1"]
+    # real CI gate: benchmarks.run exits non-zero on a raise
+    assert gate >= THROUGHPUT_BAR, (
+        f"2-engine paged router aggregate throughput fell to {gate:.2f}x "
+        f"the contiguous single engine on the shared-prefix workload "
+        f"(bar {THROUGHPUT_BAR}x)")
+
+    rows = []
+    for tag, r in results.items():
+        note = (f"target>={THROUGHPUT_BAR}" if tag == "paged_router_2"
+                else "")
+        rows.append(f"serve.{tag}.tokens_per_s,{r['tokens_per_s']:.4g},")
+        rows.append(f"serve.{tag}.speedup_vs_contiguous_1,"
+                    f"{r['speedup_vs_contiguous_1']:.4g},{note}")
+        rows.append(f"serve.{tag}.kv_bytes_read,{r['kv_bytes_read']},")
+        rows.append(f"serve.{tag}.prefix_skipped_tokens,"
+                    f"{r['prefix_skipped_tokens']},")
+    rows.append(f"serve.json,{_OUT.name},perf trajectory artifact")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -34,17 +34,18 @@ from repro.mapper.hardware import (ChipSpec, PIMHierarchy, SubarraySpec,
                                    TileSpec, curve_candidates,
                                    default_hierarchy, make_subarray,
                                    tile_curve)
-from repro.mapper.placement import (GraphPartition, NodePlacement,
-                                    PlacedBlock, Placement, PlacementPolicy,
-                                    node_homes, partition, place,
-                                    total_transfer_hops)
-from repro.mapper.schedule import (PartitionCost, PipelineTimeline, Schedule,
-                                   ScheduleReport, StageCost, build_schedule,
-                                   build_schedule_from_graph)
+from repro.mapper.placement import (GraphPartition, KVBlockSpec, KVPlacement,
+                                    NodePlacement, PlacedBlock, Placement,
+                                    PlacementPolicy, node_homes, partition,
+                                    place, place_kv, total_transfer_hops)
+from repro.mapper.schedule import (KVTraffic, PartitionCost, PipelineTimeline,
+                                   Schedule, ScheduleReport, StageCost,
+                                   build_schedule, build_schedule_from_graph)
 
 __all__ = [
     "ChipSpec", "CompiledProgram", "ConvNode", "EltwiseNode", "abstract_like",
-    "GraphPartition", "LoweringContext", "MatmulNode", "NodePlacement",
+    "GraphPartition", "KVBlockSpec", "KVPlacement", "KVTraffic",
+    "LoweringContext", "MatmulNode", "NodePlacement",
     "OpGraph", "OpNode", "PIMHierarchy", "PartitionCost",
     "PartitionedProgram", "PipelineTimeline", "PlacedBlock", "Placement",
     "PlacementPolicy", "Schedule", "ScheduleExecutor", "ScheduleReport",
@@ -53,6 +54,6 @@ __all__ = [
     "compile_arch", "compile_lenet", "compile_partitioned",
     "compile_schedule", "curve_candidates", "default_hierarchy",
     "eval_placed", "make_subarray", "map_arch", "map_lenet", "node_homes",
-    "partition", "place", "program_cache_stats", "run_schedule",
+    "partition", "place", "place_kv", "program_cache_stats", "run_schedule",
     "tile_curve", "total_transfer_hops",
 ]

@@ -331,6 +331,61 @@ def decode_attention(x, params, cfg, cache: dict, pos: jnp.ndarray):
 
 
 # ---------------------------------------------------------------------------
+# paged decode path (block-table KV, per-slot positions)
+# ---------------------------------------------------------------------------
+
+
+def init_paged_kv_cache(num_blocks: int, block_size: int, n_kv: int,
+                        head_dim: int, dtype):
+    """One attention site's share of the paged KV pool: position ``p`` of a
+    slot lives at ``[table[p // block_size], p % block_size]``."""
+    return {
+        "k": jnp.zeros((num_blocks, block_size, n_kv, head_dim), dtype),
+        "v": jnp.zeros((num_blocks, block_size, n_kv, head_dim), dtype),
+    }
+
+
+def paged_decode_attention(x, params, cfg, cache: dict,
+                           block_table: jnp.ndarray, pos: jnp.ndarray):
+    """x: [B, 1, D]; cache k/v: [num_blocks, block_size, G, hd];
+    block_table: [B, W] physical block per logical block (invalid entries
+    clamped to the scratch block); pos: [B] per-slot current length.
+
+    Returns (out [B, 1, D], updated cache). The new token's K/V scatter
+    into each slot's tail block; the score pass gathers the slot's blocks
+    through its table — per-slot positions, so mixed-progress slots (and
+    recycled slots restarting at position 0) are exact in one batched
+    call. Validity comes from the per-slot position bound, exactly like
+    the contiguous path's mask.
+    """
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    bs = cache["k"].shape[1]
+    w = block_table.shape[1]
+    if cfg.rope_style == "mrope":
+        positions = jnp.broadcast_to(pos[None, :, None], (3, b, 1))
+    else:
+        positions = pos[:, None]
+    q, k_new, v_new = _project_qkv(x, params, cfg, positions)
+    blk = block_table[jnp.arange(b), pos // bs]            # [B] tail blocks
+    off = pos % bs
+    k_store = cache["k"].at[blk, off].set(k_new[:, 0].astype(cache["k"].dtype))
+    v_store = cache["v"].at[blk, off].set(v_new[:, 0].astype(cache["v"].dtype))
+    k = k_store[block_table].reshape(b, w * bs, cfg.n_kv_heads, hd)
+    v = v_store[block_table].reshape(b, w * bs, cfg.n_kv_heads, hd)
+    g = cfg.n_kv_heads
+    qg = _grouped(q, g)                                    # [B,1,G,R,D]
+    scores = (jnp.einsum("bqgrd,bkgd->bgrqk", qg, k).astype(jnp.float32)
+              / math.sqrt(hd))
+    valid = jnp.arange(w * bs)[None] <= pos[:, None]       # [B, L] per slot
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", probs, v)
+    out = out.reshape(b, 1, cfg.n_heads * hd) @ params["wo"]
+    return out, {"k": k_store, "v": v_store}
+
+
+# ---------------------------------------------------------------------------
 # pair-scan causal flash: zero wasted blocks (hillclimb, EXPERIMENTS §Perf)
 # ---------------------------------------------------------------------------
 # The rectangular fwd/bwd above scans ALL nq x nk chunk pairs and masks the

@@ -319,6 +319,64 @@ class DecoderLM:
             cache["tail"] = stack(m_proto, self.layout.tail_units)
         return cache
 
+    def init_paged_cache(self, num_blocks: int, block_size: int) -> dict:
+        """Paged KV storage shared by all slots: per attention site,
+        ``[num_blocks, block_size, n_kv, head_dim]`` (block axis addressed
+        through per-slot block tables — see ``repro.serve.kv``). Only the
+        ``attn`` pattern pages: recurrent patterns carry O(1) state per
+        slot, so there is nothing to page."""
+        cfg = self.cfg
+        if cfg.block_pattern != "attn":
+            raise NotImplementedError(
+                f"paged KV cache requires block_pattern='attn'; "
+                f"{cfg.block_pattern!r} holds recurrent state, not KV")
+        dt = _dtype(cfg)
+        hd = cfg.resolved_head_dim
+        n = max(cfg.moe_interleave, 1) if cfg.n_experts else 1
+        proto = {f"block{i}": attention.init_paged_kv_cache(
+            num_blocks, block_size, cfg.n_kv_heads, hd, dt)
+            for i in range(n)}
+        stacked = jax.tree.map(
+            lambda a: jnp.repeat(a[None], self.layout.n_units, axis=0),
+            proto)
+        return {"layers": stacked}
+
+    def decode_step_paged(self, params, cache, token, block_table, pos):
+        """Paged counterpart of ``decode_step``: token [B] int32;
+        block_table [B, W] int32; pos [B] int32 *per-slot* positions
+        (recycled slots restart at 0 — no shared tick). Returns
+        (logits [B, V], cache)."""
+        cfg = self.cfg
+        if cfg.block_pattern != "attn":
+            raise NotImplementedError(
+                f"paged decode requires block_pattern='attn', "
+                f"got {cfg.block_pattern!r}")
+        x = layers.embed(token[:, None], params["embed"])
+        n = max(cfg.moe_interleave, 1) if cfg.n_experts else 1
+
+        def unit(xc, scanned):
+            up, uc = scanned
+            new_c = {}
+            for i in range(n):
+                bp = up[f"block{i}"]
+                h = layers.rms_norm(xc, bp["norm1"], cfg.norm_eps)
+                att, kv = attention.paged_decode_attention(
+                    h, bp["attn"], cfg, uc[f"block{i}"], block_table, pos)
+                xc = xc + att
+                new_c[f"block{i}"] = kv
+                h = layers.rms_norm(xc, bp["norm2"], cfg.norm_eps)
+                if "moe" in bp:
+                    xc = xc + moe.moe_block(h, bp["moe"], cfg)
+                else:
+                    xc = xc + layers.mlp(h, bp["mlp"])
+            return xc, new_c
+
+        x, new_cache = jax.lax.scan(unit, x,
+                                    (params["layers"], cache["layers"]))
+        x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._logits(params, x)
+        return logits[:, 0], {"layers": new_cache}
+
     def decode_step(self, params, cache, token, pos):
         """token: [B] int32 (or [B,1,D] embeds for stub archs);
         pos: scalar int32 current position. Returns (logits [B,V], cache)."""

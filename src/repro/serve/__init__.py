@@ -1,3 +1,5 @@
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.kv import KVCacheOOM, PagedKVCache
+from repro.serve.router import Router
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["KVCacheOOM", "PagedKVCache", "Request", "Router", "ServeEngine"]

@@ -1,22 +1,43 @@
 """Batched serving engine: slot-based continuous batching over the
-decode step.
+decode step, with contiguous or paged KV.
 
 A fixed pool of B slots shares one jitted ``decode_step``. Requests are
-admitted into free slots (their prompt replayed through the shared cache
-at the slot's position lane), decode ticks advance every active slot by
-one token, and finished slots (EOS or max_tokens) are freed for the next
+admitted into free slots, decode ticks advance every active slot by one
+token, and finished slots (EOS or max_tokens) are freed for the next
 queued request — so throughput stays at the batch width even with ragged
-request lengths (the vLLM-style scheduling idea, minus paged KV: slots
-own contiguous cache lanes).
+request lengths (the vLLM scheduling idea).
 
-Positions are tracked per slot; the attention mask validity comes from
-``decode_attention``'s per-position bound, so mixed-progress slots are
-correct in one batched call.
+Two cache disciplines:
+
+  * **contiguous** (``paged=False``) — every slot owns a private
+    ``max_len`` cache lane and all slots share one tick counter (the
+    cache write position). Late-admitted requests replay their prompts at
+    shifted positions over a lane that still holds the previous
+    occupant's KV below the admission tick, so recycled slots are
+    approximate; the tick counter also bounds the *total* run length at
+    ``max_len``. This path stays as the parity oracle for first-wave
+    slots and for the pim-vs-jit backends.
+  * **paged** (``paged=True``) — KV lives in a shared block pool
+    (``repro.serve.kv.PagedKVCache``); slots hold block tables and
+    *per-slot* positions. Recycled slots restart at position 0 with fresh
+    blocks (exact, not approximate), capacity is provisioned in blocks
+    rather than worst-case lanes, and requests whose prompts extend a
+    cached prefix skip replaying the shared full blocks entirely.
+
+The engine can be driven whole (``run``) or tick-by-tick (``tick_once``)
+— the latter is how ``repro.serve.router.Router`` interleaves several
+engines. ``run``'s default tick budget scales with the total remaining
+work (sum of unreplayed prompt + ungenerated tokens), not with
+``max_len``: a deep queue of short requests drains through slot
+recycling on the paged path. The contiguous path additionally stops when
+the shared tick reaches its lane bound — that is capacity exhaustion,
+reported as starvation.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import deque
 from typing import Callable
 
@@ -26,6 +47,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models.transformer import DecoderLM, build_model
+from repro.serve.kv import PagedKVCache
 
 
 @dataclasses.dataclass
@@ -42,11 +64,22 @@ class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, *, batch: int = 4,
                  max_len: int = 128, sample: Callable | None = None,
                  backend: str = "jit", pim_tech: str = "proposed",
-                 partitions: int = 1, microbatches: int = 8):
+                 partitions: int = 1, microbatches: int = 8,
+                 paged: bool = False, kv_blocks: int | None = None,
+                 kv_block_size: int = 16):
         """``backend="jit"`` jits the decode step; ``backend="pim"`` maps
         it onto the PIM hierarchy and decodes through the compiled
         schedule (``repro.mapper.compile``) — placed matmuls run as
         blocked ``pim_matmul`` calls per resident weight block.
+
+        ``paged=True`` swaps the contiguous per-slot cache lanes for a
+        paged block pool: ``kv_blocks`` physical blocks of
+        ``kv_block_size`` tokens (default: scratch + ``batch *
+        ceil(max_len / kv_block_size)``, i.e. contiguous-equivalent
+        capacity — pass fewer to actually oversubscribe). On the pim
+        backend the KV pool is additionally *placed* onto subarrays near
+        the attention consumers and its per-tick block traffic is priced
+        into the schedule (``self.schedule.kv``).
 
         ``partitions=K`` (pim backend only) compiles the decode step as K
         pipeline partition programs with explicit transfer points and
@@ -61,119 +94,264 @@ class ServeEngine:
         self.batch = batch
         self.max_len = max_len
         self.backend = backend
-        self.cache = self.model.init_cache(batch, max_len)
+        self.paged = paged
         self.slots: list[Request | None] = [None] * batch
         self.queue: deque[Request] = deque()
         self.sample = sample or (lambda logits: jnp.argmax(logits, -1))
         self.pim_program = None
         self.pipeline_timeline = None
+        self.schedule = None
+        self.kv_placement = None
         if partitions < 1 or microbatches < 1:
             raise ValueError("partitions and microbatches must be >= 1")
         if partitions > 1 and backend != "pim":
             raise ValueError("partitions require backend='pim' (the jit "
                              "backend has no partitioned plan)")
+
+        if paged:
+            self.block_size = kv_block_size
+            self.max_blocks = math.ceil(max_len / kv_block_size)
+            if kv_blocks is None:
+                kv_blocks = 1 + batch * self.max_blocks
+            self.kv: PagedKVCache | None = PagedKVCache(
+                kv_blocks, kv_block_size, batch, max_len)
+            self.cache = self.model.init_paged_cache(kv_blocks,
+                                                     kv_block_size)
+        else:
+            self.kv = None
+            self.cache = self.model.init_cache(batch, max_len)
+
+        # per-token KV footprint (bytes, all attention sites) for the
+        # bytes-moved accounting; 0 for non-attn patterns (no KV)
+        if cfg.block_pattern == "attn":
+            n = max(cfg.moe_interleave, 1) if cfg.n_experts else 1
+            sites = self.model.layout.n_units * n
+            itemsize = jnp.dtype(cfg.dtype).itemsize
+            self._kv_sites = sites
+            self._tok_bytes = (sites * 2 * cfg.n_kv_heads
+                               * cfg.resolved_head_dim * itemsize)
+        else:
+            self._kv_sites = 0
+            self._tok_bytes = 0
+        self.kv_bytes_read = 0
+        self.kv_bytes_written = 0
+        self.prefix_skipped_tokens = 0
+
         if backend == "jit":
-            self._decode = jax.jit(self._decode_impl)
+            self._decode = jax.jit(self._decode_impl_paged if paged
+                                   else self._decode_impl)
         elif backend == "pim":
-            from repro import mapper
-            sched = mapper.build_schedule(
-                self._decode_impl, mapper.abstract_like(params),
-                mapper.abstract_like(self.cache),
-                jax.ShapeDtypeStruct((batch,), jnp.int32),
-                jax.ShapeDtypeStruct((), jnp.int32), tech=pim_tech,
-                partitions=partitions if partitions > 1 else None)
-            # use_cache=False: the cache keys on fn identity and this is
-            # a bound method — per-engine keys would never hit but would
-            # pin the engine (params, KV cache) in the global cache
-            if partitions > 1:
-                self.pim_program = mapper.compile_partitioned(
-                    sched, use_cache=False)
-                self.pipeline_timeline = sched.pipeline(microbatches)
-            else:
-                self.pim_program = mapper.compile_schedule(sched,
-                                                           use_cache=False)
-            self._decode = self.pim_program
+            self._build_pim(pim_tech, partitions, microbatches)
         else:
             raise ValueError(f"backend must be 'jit' or 'pim', "
                              f"got {backend!r}")
         self.completed: list[Request] = []
         self.starved: list[int] = []        # rids pending at last run() exit
+        # per-slot decode state (persistent so tick_once can be driven
+        # externally by the router)
+        self._prompt_idx = np.zeros(batch, np.int64)
+        self._last_tok = np.zeros(batch, np.int32)
+        self._pos = np.zeros(batch, np.int32)    # paged: per-slot position
+        self._tick = 0                           # contiguous: shared tick
 
-    # one batched decode tick; per-slot positions via vmapped-by-slot step
+    def _build_pim(self, pim_tech: str, partitions: int,
+                   microbatches: int) -> None:
+        from repro import mapper
+        if self.paged:
+            args = (mapper.abstract_like(self.params),
+                    mapper.abstract_like(self.cache),
+                    jax.ShapeDtypeStruct((self.batch,), jnp.int32),
+                    jax.ShapeDtypeStruct((self.batch, self.max_blocks),
+                                         jnp.int32),
+                    jax.ShapeDtypeStruct((self.batch,), jnp.int32))
+            fn = self._decode_impl_paged
+        else:
+            args = (mapper.abstract_like(self.params),
+                    mapper.abstract_like(self.cache),
+                    jax.ShapeDtypeStruct((self.batch,), jnp.int32),
+                    jax.ShapeDtypeStruct((), jnp.int32))
+            fn = self._decode_impl
+        sched = mapper.build_schedule(
+            fn, *args, tech=pim_tech,
+            partitions=partitions if partitions > 1 else None)
+        if self.paged and self._kv_sites:
+            # place the KV pool near its attention consumers and price
+            # its per-tick block reads/writes into the schedule
+            n_bits = sched.hierarchy.subarray.n_bits
+            spec = mapper.KVBlockSpec(
+                sites=self._kv_sites, num_blocks=self.kv.num_blocks,
+                block_size=self.block_size,
+                token_bits=2 * self.cfg.n_kv_heads
+                * self.cfg.resolved_head_dim * n_bits)
+            self.kv_placement = mapper.place_kv(sched.graph,
+                                                sched.placement, spec)
+            sched.attach_kv(self.kv_placement,
+                            resident_tokens=max(1, self.max_len // 2),
+                            batch=self.batch)
+        self.schedule = sched
+        # use_cache=False: the cache keys on fn identity and this is
+        # a bound method — per-engine keys would never hit but would
+        # pin the engine (params, KV cache) in the global cache
+        if partitions > 1:
+            self.pim_program = mapper.compile_partitioned(
+                sched, use_cache=False)
+            self.pipeline_timeline = sched.pipeline(microbatches)
+        else:
+            self.pim_program = mapper.compile_schedule(sched,
+                                                       use_cache=False)
+        self._decode = self.pim_program
+
+    # one batched decode tick
     def _decode_impl(self, params, cache, tokens, pos):
         # NOTE: the shared cache is advanced with a single scalar position
         # per tick; slots joining mid-stream replay their prompts so all
         # active slots share the tick counter (contiguous-lane batching).
         return self.model.decode_step(params, cache, tokens, pos)
 
+    def _decode_impl_paged(self, params, cache, tokens, block_table, pos):
+        return self.model.decode_step_paged(params, cache, tokens,
+                                            block_table, pos)
+
     def submit(self, req: Request) -> None:
         self.queue.append(req)
+
+    def prefix_lookup(self, prompt) -> int:
+        """Prompt tokens this engine's paged cache already holds (0 when
+        contiguous) — the router's prefix-affinity signal."""
+        return self.kv.lookup_prefix(prompt) if self.paged else 0
+
+    def pending_work(self) -> int:
+        """Upper bound on the decode ticks needed to drain queue + slots:
+        unreplayed prompt tokens plus ungenerated tokens."""
+        w = 0
+        for r in self.queue:
+            w += max(0, len(r.prompt) - 1) + r.max_tokens
+        for s, r in enumerate(self.slots):
+            if r is not None:
+                w += (max(0, len(r.prompt) - 1 - int(self._prompt_idx[s]))
+                      + r.max_tokens - len(r.out))
+        return w
+
+    def pending_rids(self) -> list[int]:
+        return ([r.rid for r in self.slots if r is not None]
+                + [r.rid for r in self.queue])
 
     def _admit(self) -> None:
         for s in range(self.batch):
             if self.slots[s] is None and self.queue:
-                self.slots[s] = self.queue.popleft()
+                req = self.queue.popleft()
+                self.slots[s] = req
+                # explicit per-slot state reset on (re)admission — a
+                # recycled slot must never rely on the prompt phase
+                # masking the previous occupant's sample/cursor
+                self._prompt_idx[s] = 0
+                self._last_tok[s] = 0
+                if self.paged:
+                    shared = self.kv.alloc_slot(s, req.prompt)
+                    self._pos[s] = shared
+                    self._prompt_idx[s] = shared   # skip cached prefix
+                    self.prefix_skipped_tokens += shared
+
+    def _recycle(self, s: int) -> None:
+        """Free the slot and explicitly reset all of its decode state."""
+        self.slots[s] = None
+        self._prompt_idx[s] = 0
+        self._last_tok[s] = 0
+        if self.paged:
+            self.kv.free_slot(s)
+            self._pos[s] = 0
 
     def step(self, tick: int, tokens: np.ndarray) -> np.ndarray:
-        """Advance every slot one token; returns next tokens [B]."""
+        """Advance every slot one token (contiguous path); returns next
+        tokens [B]."""
         logits, self.cache = self._decode(self.params, self.cache,
                                           jnp.asarray(tokens),
                                           jnp.int32(tick))
         return np.asarray(self.sample(logits), np.int32)
 
+    def tick_once(self) -> bool:
+        """Advance every active slot one token. Returns False when no
+        progress is possible: nothing admitted, or — contiguous only —
+        the shared tick reached the lane bound (capacity exhaustion)."""
+        self._admit()
+        active = [s for s in range(self.batch) if self.slots[s] is not None]
+        if not active:
+            return False
+        if not self.paged and self._tick >= self.max_len - 1:
+            return False          # shared lanes full; caller reports starved
+        feed = np.zeros(self.batch, np.int32)
+        for s in active:
+            req = self.slots[s]
+            k = int(self._prompt_idx[s])
+            feed[s] = (req.prompt[k] if k < len(req.prompt)
+                       else self._last_tok[s])
+        if self.paged:
+            for s in active:
+                self.cache = self.kv.ensure(self.cache, s, int(self._pos[s]))
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(feed),
+                self.kv.device_table(), jnp.asarray(self._pos))
+            nxt = np.asarray(self.sample(logits), np.int32)
+            bs = self.block_size
+            for s in active:
+                self.kv.note_filled(s, int(self._pos[s]))
+                self._pos[s] += 1
+                # block-granular read + one-token write per site
+                self.kv_bytes_read += (math.ceil(int(self._pos[s]) / bs)
+                                       * bs * self._tok_bytes)
+            self.kv_bytes_written += len(active) * self._tok_bytes
+        else:
+            nxt = self.step(self._tick, feed)
+            # contiguous lanes stream their full provisioned length
+            self.kv_bytes_read += len(active) * self.max_len \
+                * self._tok_bytes
+            self.kv_bytes_written += len(active) * self._tok_bytes
+        for s in active:
+            req = self.slots[s]
+            if self._prompt_idx[s] < len(req.prompt) - 1:
+                self._prompt_idx[s] += 1
+            else:
+                self._prompt_idx[s] = len(req.prompt)  # gen: feed samples
+                req.out.append(int(nxt[s]))
+                self._last_tok[s] = nxt[s]
+                hit_eos = req.eos is not None and int(nxt[s]) == req.eos
+                if len(req.out) >= req.max_tokens or hit_eos:
+                    req.done = True
+                    self.completed.append(req)
+                    self._recycle(s)
+        self._admit()
+        self._tick += 1
+        return True
+
     def run(self, max_ticks: int | None = None, *,
             on_starvation: str = "raise") -> list[Request]:
         """Drive until queue + slots drain. Simple synchronous scheduler:
-        all slots advance on a shared tick; a slot in 'prompt phase' feeds
-        its next prompt token, a 'gen phase' slot feeds its last sampled
-        token; finished slots recycle (their cache lane is overwritten by
-        the next request's prompt replay).
+        all slots advance per tick; a slot in 'prompt phase' feeds its
+        next prompt token, a 'gen phase' slot feeds its last sampled
+        token; finished slots recycle.
 
-        The tick budget defaults to ``max_len - 1`` (the shared cache's
-        position bound). If it elapses with requests still pending, that
-        is starvation, not completion: ``on_starvation="raise"`` (default)
+        The tick budget defaults to the total remaining work (unreplayed
+        prompt + ungenerated tokens over queue and slots) — it scales
+        with the queue, so a deep queue of short requests drains through
+        slot recycling instead of being starved by a fixed bound. If the
+        budget elapses — or the contiguous path exhausts its shared
+        ``max_len`` lanes — with requests still pending, that is
+        starvation, not completion: ``on_starvation="raise"`` (default)
         raises ``RuntimeError``; ``"return"`` records the pending request
         ids in ``self.starved`` and returns what finished."""
         if on_starvation not in ("raise", "return"):
             raise ValueError(f"on_starvation must be 'raise' or 'return', "
                              f"got {on_starvation!r}")
-        self._admit()
-        tick = 0
-        prompt_idx = np.zeros(self.batch, np.int64)
-        last_tok = np.zeros(self.batch, np.int32)
-        max_ticks = max_ticks or (self.max_len - 1)
-        while (any(s is not None for s in self.slots) or self.queue) \
-                and tick < max_ticks:
-            feed = np.zeros(self.batch, np.int32)
-            for s, req in enumerate(self.slots):
-                if req is None:
-                    continue
-                k = int(prompt_idx[s])
-                feed[s] = (req.prompt[k] if k < len(req.prompt)
-                           else last_tok[s])
-            nxt = self.step(tick, feed)
-            for s, req in enumerate(self.slots):
-                if req is None:
-                    continue
-                if prompt_idx[s] < len(req.prompt) - 1:
-                    prompt_idx[s] += 1
-                else:
-                    prompt_idx[s] = len(req.prompt)  # gen phase: feed samples
-                    req.out.append(int(nxt[s]))
-                    last_tok[s] = nxt[s]
-                    hit_eos = req.eos is not None and int(nxt[s]) == req.eos
-                    if len(req.out) >= req.max_tokens or hit_eos:
-                        req.done = True
-                        self.completed.append(req)
-                        self.slots[s] = None
-                        prompt_idx[s] = 0
-            self._admit()
-            tick += 1
-        self.starved = ([r.rid for r in self.slots if r is not None]
-                        + [r.rid for r in self.queue])
+        budget = max_ticks if max_ticks is not None \
+            else max(1, self.pending_work())
+        ticks = 0
+        while ticks < budget and self.tick_once():
+            ticks += 1
+        self.starved = self.pending_rids()
         if self.starved and on_starvation == "raise":
             raise RuntimeError(
-                f"serve loop exhausted max_ticks={max_ticks} with "
-                f"requests still pending (rids {self.starved}); raise "
-                f"max_ticks/max_len or pass on_starvation='return'")
+                f"serve loop stopped after {ticks} ticks (budget {budget}, "
+                f"max_len {self.max_len}) with requests still pending "
+                f"(rids {self.starved}); raise max_ticks/max_len or pass "
+                f"on_starvation='return'")
         return self.completed

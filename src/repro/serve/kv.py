@@ -1,0 +1,304 @@
+"""Paged KV cache: free-list block allocator, per-slot block tables, and
+copy-on-write prefix sharing (the vLLM design, sized for PIM residency).
+
+The contiguous cache provisions every slot a private ``max_len`` lane, so
+KV capacity scales with the worst case and the mapper never sees KV
+traffic. Here KV storage is one shared pool of fixed-size blocks —
+``[num_blocks, block_size, n_kv_heads, head_dim]`` per attention site —
+and a slot owns a *block table*: logical position ``p`` lives at offset
+``p % block_size`` of physical block ``table[p // block_size]``. Slot
+count is decoupled from ``max_len``; capacity is provisioned for the
+*observed* working set.
+
+Sharing model (copy-on-write):
+  * every **full** block whose tokens are entirely prompt is
+    content-addressed by the hash of the whole prompt prefix up to and
+    including it; a later request whose prompt extends the same prefix
+    attaches the cached blocks by reference (refcount++) instead of
+    recomputing them — the engine then skips replaying those prompt
+    tokens entirely;
+  * shared blocks are immutable: a write landing in a block with
+    refcount > 1 (e.g. after :meth:`fork_slot`) first copies it to a
+    fresh block (``ensure`` performs the copy-on-write);
+  * blocks whose refcount drops to zero but that still back a cached
+    prefix stay resident and evictable (LRU) — the pool reclaims them
+    only when the free list runs dry.
+
+Physical block 0 is a pinned scratch block: inactive batch lanes write
+there and unallocated table entries clamp to it, so the one batched
+decode call stays shape-static while never corrupting live blocks (reads
+from it are masked by the per-slot position bound).
+
+The allocator is host-side metadata only; the device storage pytree is
+threaded through the two methods that must touch it (``ensure`` for the
+copy-on-write block copy). ``device_table()`` materializes the clamped
+``[slots, max_blocks]`` int32 table the paged attention kernel gathers
+through.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import hashlib
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SCRATCH_BLOCK = 0
+
+
+class KVCacheOOM(RuntimeError):
+    """The paged KV pool has no free (or evictable) block left."""
+
+
+@dataclasses.dataclass
+class _SlotMeta:
+    """Host bookkeeping for one admitted slot."""
+
+    chain_keys: list[bytes]       # prefix hash per full prompt block
+    prompt_blocks: int            # blocks holding only prompt tokens
+
+
+class PagedKVCache:
+    """Block allocator + prefix index over a paged KV pool.
+
+    ``num_blocks`` counts physical blocks *including* the pinned scratch
+    block 0; ``slots`` is the engine's batch width; ``max_len`` bounds one
+    request's total length (it sizes the per-slot table, not the pool).
+    """
+
+    def __init__(self, num_blocks: int, block_size: int, slots: int,
+                 max_len: int):
+        if num_blocks < 2:
+            raise ValueError(f"need >= 2 blocks (block 0 is the pinned "
+                             f"scratch block), got {num_blocks}")
+        if block_size < 1 or slots < 1 or max_len < 1:
+            raise ValueError("block_size, slots and max_len must be >= 1")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.slots = slots
+        self.max_len = max_len
+        self.max_blocks = math.ceil(max_len / block_size)
+        self.table = np.full((slots, self.max_blocks), -1, np.int32)
+        self.ref = np.zeros(num_blocks, np.int64)
+        self.ref[SCRATCH_BLOCK] = 1            # pinned, never allocated
+        self._free: collections.deque[int] = collections.deque(
+            range(1, num_blocks))
+        self._prefix: dict[bytes, int] = {}    # chain hash -> block id
+        self._block_key: dict[int, bytes] = {} # block id -> chain hash
+        # ref==0 prefix-cached blocks, oldest first (eviction order)
+        self._cached: collections.OrderedDict[int, None] = \
+            collections.OrderedDict()
+        self._meta: list[_SlotMeta | None] = [None] * slots
+        self._device_table: jnp.ndarray | None = None
+        self.stats = {
+            "allocated_blocks": 0,    # fresh allocations (incl. CoW copies)
+            "freed_blocks": 0,        # returned to the free list
+            "evicted_blocks": 0,      # cached prefix blocks reclaimed
+            "shared_blocks": 0,       # attached by reference at admission
+            "shared_tokens": 0,       # prompt tokens skipped via sharing
+            "cow_copies": 0,
+        }
+
+    # -- content addressing --------------------------------------------------
+
+    def _chain_keys(self, prompt, n_blocks: int) -> list[bytes]:
+        """``keys[i]`` hashes the whole prefix ``prompt[:(i+1)*bs]`` —
+        chain hashes are cumulative, so equal keys imply equal full token
+        prefixes. Computed incrementally (one running sha1 updated block
+        by block), so all keys cost one O(len) pass, not O(len^2)."""
+        arr = np.ascontiguousarray(np.asarray(prompt, np.int64))
+        h = hashlib.sha1()
+        keys = []
+        bs = self.block_size
+        for i in range(n_blocks):
+            h.update(arr[i * bs:(i + 1) * bs].tobytes())
+            keys.append(h.digest())
+        return keys
+
+    def lookup_prefix(self, prompt) -> int:
+        """Prompt tokens covered by cached full blocks (longest chain hit,
+        capped so at least the final prompt token is always replayed —
+        decode needs its logits, which are not cached)."""
+        bs = self.block_size
+        usable = min((len(prompt) - 1) // bs, self.max_blocks)
+        n = 0
+        for i, key in enumerate(self._chain_keys(prompt, usable)):
+            if key not in self._prefix:
+                break
+            n = i + 1
+        return n * bs
+
+    # -- slot lifecycle ------------------------------------------------------
+
+    def alloc_slot(self, slot: int, prompt) -> int:
+        """Admit a request into ``slot``: attach every cached full prefix
+        block by reference and return the number of prompt tokens those
+        blocks cover (the engine starts replay/positions there). Never
+        allocates — tail blocks are allocated on demand by ``ensure``."""
+        if self._meta[slot] is not None:
+            raise RuntimeError(f"slot {slot} is already allocated")
+        bs = self.block_size
+        full = min(len(prompt) // bs, self.max_blocks)
+        keys = self._chain_keys(prompt, full)
+        self._meta[slot] = _SlotMeta(chain_keys=keys, prompt_blocks=full)
+        shared = 0
+        usable = min((len(prompt) - 1) // bs, self.max_blocks)
+        for i in range(usable):
+            bid = self._prefix.get(keys[i])
+            if bid is None:
+                break
+            self.table[slot, i] = bid
+            self._retain(bid)
+            shared = (i + 1) * bs
+        if shared:
+            self.stats["shared_blocks"] += shared // bs
+            self.stats["shared_tokens"] += shared
+            self._device_table = None
+        return shared
+
+    def free_slot(self, slot: int) -> None:
+        """Release every block the slot references; blocks that back a
+        cached prefix stay resident (evictable), the rest return to the
+        free list."""
+        for bi in range(self.max_blocks):
+            bid = int(self.table[slot, bi])
+            if bid >= 0:
+                self._release(bid)
+        self.table[slot, :] = -1
+        self._meta[slot] = None
+        self._device_table = None
+
+    def fork_slot(self, src: int, dst: int) -> None:
+        """Share ``src``'s entire table with ``dst`` (beam/n-best style).
+        Both slots may keep decoding: the first write into any now-shared
+        block triggers the copy-on-write in ``ensure``."""
+        if self._meta[dst] is not None:
+            raise RuntimeError(f"slot {dst} is already allocated")
+        src_meta = self._meta[src]
+        if src_meta is None:
+            raise RuntimeError(f"slot {src} is not allocated")
+        for bi in range(self.max_blocks):
+            bid = int(self.table[src, bi])
+            if bid >= 0:
+                self.table[dst, bi] = bid
+                self._retain(bid)
+        self._meta[dst] = _SlotMeta(chain_keys=list(src_meta.chain_keys),
+                                    prompt_blocks=src_meta.prompt_blocks)
+        self._device_table = None
+
+    # -- write-path maintenance ----------------------------------------------
+
+    def ensure(self, cache, slot: int, pos: int):
+        """Make position ``pos`` of ``slot`` writable before the decode
+        tick: allocate the covering block if absent, or — when the block
+        is shared (refcount > 1) — copy it to a private block first
+        (copy-on-write). Returns the (possibly updated) storage pytree."""
+        bi = pos // self.block_size
+        if bi >= self.max_blocks:
+            raise KVCacheOOM(
+                f"slot {slot} position {pos} exceeds the per-slot table "
+                f"({self.max_blocks} blocks x {self.block_size} tokens = "
+                f"max_len {self.max_len}); raise max_len")
+        bid = int(self.table[slot, bi])
+        if bid < 0:
+            new = self._get_free_block()
+            self.table[slot, bi] = new
+            self.ref[new] = 1
+            self.stats["allocated_blocks"] += 1
+            self._device_table = None
+        elif self.ref[bid] > 1:
+            new = self._get_free_block()
+            cache = copy_block(cache, bid, new)
+            self._release(bid)
+            self.table[slot, bi] = new
+            self.ref[new] = 1
+            self.stats["cow_copies"] += 1
+            self.stats["allocated_blocks"] += 1
+            self._device_table = None
+        return cache
+
+    def note_filled(self, slot: int, pos: int) -> None:
+        """Record that ``pos`` was written. When that completes a block
+        holding only prompt tokens, register it in the prefix index so
+        later requests sharing the prefix attach it instead of
+        recomputing."""
+        if (pos + 1) % self.block_size:
+            return
+        bi = pos // self.block_size
+        meta = self._meta[slot]
+        if meta is None or bi >= meta.prompt_blocks:
+            return                     # tail / generated block: private
+        key = meta.chain_keys[bi]
+        bid = int(self.table[slot, bi])
+        if key not in self._prefix and bid not in self._block_key:
+            self._prefix[key] = bid
+            self._block_key[bid] = key
+
+    # -- device views --------------------------------------------------------
+
+    def device_table(self) -> jnp.ndarray:
+        """Clamped int32 ``[slots, max_blocks]`` table for the gather path
+        (unallocated entries point at the scratch block; reads from it are
+        masked by the position bound)."""
+        if self._device_table is None:
+            self._device_table = jnp.asarray(
+                np.maximum(self.table, SCRATCH_BLOCK), jnp.int32)
+        return self._device_table
+
+    # -- pool internals ------------------------------------------------------
+
+    def _retain(self, bid: int) -> None:
+        if self.ref[bid] == 0:
+            self._cached.pop(bid, None)    # was evictable; now live again
+        self.ref[bid] += 1
+
+    def _release(self, bid: int) -> None:
+        self.ref[bid] -= 1
+        assert self.ref[bid] >= 0, f"refcount underflow on block {bid}"
+        if self.ref[bid] == 0:
+            if bid in self._block_key:
+                self._cached[bid] = None   # keep cached, evictable LRU
+                self._cached.move_to_end(bid)
+            else:
+                self._free.append(bid)
+                self.stats["freed_blocks"] += 1
+
+    def _get_free_block(self) -> int:
+        if self._free:
+            return self._free.popleft()
+        if self._cached:
+            bid, _ = self._cached.popitem(last=False)   # LRU prefix block
+            key = self._block_key.pop(bid)
+            del self._prefix[key]
+            self.stats["evicted_blocks"] += 1
+            return bid
+        raise KVCacheOOM(
+            f"paged KV pool exhausted: all {self.num_blocks - 1} "
+            f"allocatable blocks (block_size {self.block_size}) are "
+            f"referenced by live slots; raise kv_blocks or drain requests")
+
+    @property
+    def live_blocks(self) -> int:
+        """Blocks currently referenced by at least one slot (scratch
+        excluded)."""
+        return int((self.ref[1:] > 0).sum())
+
+    @property
+    def cached_blocks(self) -> int:
+        """Unreferenced blocks kept resident for prefix reuse."""
+        return len(self._cached)
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+
+def copy_block(cache, src: int, dst: int):
+    """Device-side block copy across every storage leaf. Leaves are
+    ``[n_units, num_blocks, block_size, n_kv, head_dim]`` — the block
+    axis is 1 (the model stacks attention sites on axis 0)."""
+    return jax.tree.map(lambda a: a.at[:, dst].set(a[:, src]), cache)

@@ -1,0 +1,124 @@
+"""Multi-engine serving router: queue-depth-aware dispatch with prefix
+affinity over N ``ServeEngine``s.
+
+One ``ServeEngine`` is one PIM placement (replicated engines hold copies
+of the weights; partition-sharded engines run ``partitions=K`` pipeline
+plans — both are just engine kwargs). The router is the serving-side
+counterpart of the pipeline partitions: it scales *request* throughput
+across placements the way ``Schedule.pipeline`` scales *microbatch*
+throughput within one.
+
+Dispatch policy, per request:
+
+  1. **prefix affinity** — ask every engine's paged KV cache how many
+     prompt tokens it already holds (``ServeEngine.prefix_lookup``);
+     when any engine has a cached prefix, route to the engine holding
+     the longest one (ties broken by lighter queue). The request then
+     skips replaying those tokens entirely — routing it anywhere else
+     would recompute (and duplicate) the blocks.
+  2. **queue depth** — otherwise route to the engine with the least
+     pending work (remaining prompt + generation tokens over its queue
+     and active slots), so ragged request lengths don't pile behind one
+     engine.
+
+``run`` drives all engines tick-by-tick in an interleaved loop
+(``ServeEngine.tick_once``), so no engine's queue waits for another's to
+drain; the budget scales with total remaining work, same as the
+engine-level scheduler.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable
+
+from repro.serve.engine import Request, ServeEngine
+
+
+class Router:
+    def __init__(self, engines: Iterable[ServeEngine]):
+        self.engines = list(engines)
+        if not self.engines:
+            raise ValueError("Router needs at least one engine")
+        self.stats = {
+            "prefix_routed": 0,       # dispatched by prefix affinity
+            "depth_routed": 0,        # dispatched by queue depth
+            "per_engine": [0] * len(self.engines),
+        }
+        self.starved: list[int] = []
+
+    @classmethod
+    def replicated(cls, cfg, params, n_engines: int = 2,
+                   **engine_kwargs) -> "Router":
+        """N engines over replicated placements of the same params.
+        ``engine_kwargs`` pass through to every ``ServeEngine`` (e.g.
+        ``paged=True``, ``backend="pim"``, ``partitions=K`` for
+        partition-sharded placements)."""
+        if n_engines < 1:
+            raise ValueError(f"need >= 1 engine, got {n_engines}")
+        return cls([ServeEngine(cfg, params, **engine_kwargs)
+                    for _ in range(n_engines)])
+
+    def submit(self, req: Request) -> int:
+        """Dispatch one request; returns the chosen engine index."""
+        hits = [e.prefix_lookup(req.prompt) for e in self.engines]
+        best = max(hits)
+        if best > 0:
+            cands = [i for i, h in enumerate(hits) if h == best]
+            idx = min(cands, key=lambda i: self.engines[i].pending_work())
+            self.stats["prefix_routed"] += 1
+        else:
+            idx = min(range(len(self.engines)),
+                      key=lambda i: self.engines[i].pending_work())
+            self.stats["depth_routed"] += 1
+        self.stats["per_engine"][idx] += 1
+        self.engines[idx].submit(req)
+        return idx
+
+    def pending_work(self) -> int:
+        return sum(e.pending_work() for e in self.engines)
+
+    def pending_rids(self) -> list[int]:
+        return [rid for e in self.engines for rid in e.pending_rids()]
+
+    @property
+    def completed(self) -> list[Request]:
+        return [r for e in self.engines for r in e.completed]
+
+    @property
+    def prefix_skipped_tokens(self) -> int:
+        return sum(e.prefix_skipped_tokens for e in self.engines)
+
+    @property
+    def kv_bytes_read(self) -> int:
+        return sum(e.kv_bytes_read for e in self.engines)
+
+    @property
+    def kv_bytes_written(self) -> int:
+        return sum(e.kv_bytes_written for e in self.engines)
+
+    def run(self, max_ticks: int | None = None, *,
+            on_starvation: str = "raise") -> list[Request]:
+        """Interleave all engines until every queue drains: each router
+        tick advances every engine with admissible work by one decode
+        tick. Budget and starvation semantics match ``ServeEngine.run``
+        (budget scales with total remaining work; an engine that can no
+        longer progress — e.g. contiguous lanes exhausted — leaves its
+        pending requests in ``self.starved``)."""
+        if on_starvation not in ("raise", "return"):
+            raise ValueError(f"on_starvation must be 'raise' or 'return', "
+                             f"got {on_starvation!r}")
+        budget = max_ticks if max_ticks is not None \
+            else max(1, self.pending_work())
+        ticks = 0
+        while ticks < budget:
+            progressed = [e.tick_once() for e in self.engines]
+            if not any(progressed):
+                break
+            ticks += 1
+        self.starved = self.pending_rids()
+        if self.starved and on_starvation == "raise":
+            raise RuntimeError(
+                f"router stopped after {ticks} ticks (budget {budget}) "
+                f"with requests still pending (rids {self.starved}); "
+                f"raise max_ticks or pass on_starvation='return'")
+        return self.completed

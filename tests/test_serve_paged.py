@@ -1,0 +1,288 @@
+"""Paged KV serving: token parity vs the contiguous oracle and the
+single-request reference (jit and pim backends), block alloc/free under
+churn, copy-on-write forking, prefix-sharing accounting, OOM errors, the
+work-scaled starvation budget, and router dispatch across 2 engines."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models.transformer import build_model
+from repro.serve import (KVCacheOOM, PagedKVCache, Request, Router,
+                         ServeEngine)
+from repro.serve.kv import SCRATCH_BLOCK
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = configs.get_smoke_config("llama3-8b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _greedy_reference(model, params, prompt, n_tokens):
+    cache = model.init_cache(1, 64)
+    out, last = [], None
+    for t in range(len(prompt) + n_tokens - 1):
+        feed = prompt[t] if t < len(prompt) else last
+        logits, cache = model.decode_step(params, cache,
+                                          jnp.asarray([feed], jnp.int32),
+                                          jnp.int32(t))
+        nxt = int(jnp.argmax(logits, -1)[0])
+        if t >= len(prompt) - 1:
+            out.append(nxt)
+            last = nxt
+    return out
+
+
+# ---------------------------------------------------------------------------
+# token parity
+# ---------------------------------------------------------------------------
+
+
+def test_paged_matches_reference_including_recycled_slots(setup):
+    """Per-slot positions make recycled slots exact: every request —
+    including those admitted into recycled slots mid-run — matches the
+    lone-request greedy reference. (The contiguous engine can only
+    promise this for first-wave slots: a recycled lane still holds the
+    previous occupant's KV below the admission tick.)"""
+    cfg, model, params = setup
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 3 + i, dtype=np.int32)
+               for i in range(5)]
+    refs = [_greedy_reference(model, params, p, 4) for p in prompts]
+    eng = ServeEngine(cfg, params, batch=2, max_len=32, paged=True,
+                      kv_block_size=4)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_tokens=4))
+    done = {r.rid: r for r in eng.run()}
+    assert len(done) == 5
+    for i in range(5):
+        assert done[i].out == refs[i]
+    # recycled slot state was explicitly reset, not left to masking
+    assert all(s is None for s in eng.slots)
+    assert not eng._prompt_idx.any() and not eng._last_tok.any()
+    assert not eng._pos.any()
+
+
+def test_paged_matches_contiguous_first_wave(setup):
+    """First-wave slots (admitted at tick 0) are where the contiguous
+    engine is exact — the paged engine must agree token for token."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, 4 + i, dtype=np.int32)
+               for i in range(2)]
+    cont = ServeEngine(cfg, params, batch=2, max_len=64)
+    paged = ServeEngine(cfg, params, batch=2, max_len=64, kv_block_size=8,
+                        paged=True)
+    for i, p in enumerate(prompts):
+        cont.submit(Request(rid=i, prompt=p, max_tokens=5))
+        paged.submit(Request(rid=i, prompt=p, max_tokens=5))
+    want = {r.rid: r.out for r in cont.run()}
+    got = {r.rid: r.out for r in paged.run()}
+    assert got == want
+
+
+def test_pim_backend_parity_and_kv_priced_schedule(setup):
+    """backend='pim' decodes the paged path through the compiled
+    placement token-identically to jit, with the KV pool placed and its
+    traffic priced into a schedule that still reconciles."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab_size, 4 + i, dtype=np.int32)
+               for i in range(3)]
+
+    def drive(backend):
+        eng = ServeEngine(cfg, params, batch=2, max_len=16, paged=True,
+                          kv_block_size=4, backend=backend)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_tokens=3))
+        return eng, {r.rid: r.out for r in eng.run()}
+
+    _, want = drive("jit")
+    eng, got = drive("pim")
+    assert got == want
+
+    sched = eng.schedule
+    assert sched.kv is not None and sched.kv_placement is not None
+    assert sched.kv.t_s > 0 and sched.kv.read_bits > 0
+    rec = sched.reconcile()
+    assert rec["counts_match"] and rec["latency_ge_ideal"]
+    # KV streams joined the pipeline contention model
+    assert sched.pipeline(4).interval_s > 0
+    kvp = eng.kv_placement
+    # pages live beyond the weight region, consumers are placed homes
+    weights_end = sched.placement.n_subarrays
+    for site in range(kvp.spec.sites):
+        assert kvp.site_first[site] >= weights_end
+        home = kvp.block_home(site, 0)
+        hops = sched.hierarchy.hop_count(home, kvp.consumer_home(site))
+        assert hops >= 0
+
+
+# ---------------------------------------------------------------------------
+# allocator: churn, sharing, copy-on-write, OOM
+# ---------------------------------------------------------------------------
+
+
+def test_block_alloc_free_under_churn(setup):
+    cfg, model, params = setup
+    rng = np.random.default_rng(3)
+    eng = ServeEngine(cfg, params, batch=2, max_len=24, paged=True,
+                      kv_block_size=4)
+    for wave in range(2):
+        for i in range(6):
+            eng.submit(Request(
+                rid=wave * 10 + i,
+                prompt=rng.integers(0, cfg.vocab_size, 3 + i % 4,
+                                    dtype=np.int32),
+                max_tokens=2 + i % 3))
+        eng.run()
+    kv = eng.kv
+    assert kv.live_blocks == 0                       # nothing leaked
+    assert kv.ref[SCRATCH_BLOCK] == 1                # scratch stays pinned
+    assert (kv.ref[1:] >= 0).all()
+    # every allocatable block is either free or prefix-cached
+    assert kv.free_blocks + kv.cached_blocks == kv.num_blocks - 1
+    assert kv.stats["allocated_blocks"] > 0
+
+
+def test_prefix_sharing_reduces_allocated_blocks(setup):
+    cfg, model, params = setup
+    rng = np.random.default_rng(4)
+    prefix = rng.integers(0, cfg.vocab_size, 12, dtype=np.int32)
+    ref = _greedy_reference(model, params, prefix, 3)
+
+    def serve_twice(block_size):
+        eng = ServeEngine(cfg, params, batch=1, max_len=32, paged=True,
+                          kv_block_size=block_size)
+        for rid in range(2):
+            eng.submit(Request(rid=rid, prompt=prefix, max_tokens=3))
+            eng.run()
+        return eng
+
+    eng = serve_twice(block_size=4)
+    outs = [r.out for r in eng.completed]
+    assert outs == [ref, ref]                  # sharing changes no tokens
+    st = eng.kv.stats
+    assert st["shared_blocks"] > 0 and st["shared_tokens"] > 0
+    assert eng.prefix_skipped_tokens == st["shared_tokens"]
+    # second request reused the first's full prompt blocks: strictly fewer
+    # fresh allocations than two independent prompts would need
+    first_alloc = 12 // 4 + 1                  # prompt blocks + gen tail
+    assert st["allocated_blocks"] < 2 * first_alloc + 2
+
+
+def test_copy_on_write_fork():
+    """Forked slots share every block; the first write into a shared
+    block copies it instead of mutating the peer's history."""
+    kv = PagedKVCache(num_blocks=8, block_size=4, slots=2, max_len=16)
+    store = {"k": jnp.arange(8 * 4, dtype=jnp.float32).reshape(1, 8, 4)}
+    kv.alloc_slot(0, np.arange(6))
+    for pos in range(6):
+        store = kv.ensure(store, 0, pos)
+        kv.note_filled(0, pos)
+    t0 = kv.table[0].copy()
+    kv.fork_slot(0, 1)
+    assert (kv.table[1] == t0).all()
+    shared = int(kv.table[0, 1])               # both slots' tail block
+    assert kv.ref[shared] == 2
+    store = kv.ensure(store, 1, 6)             # write pos 6 -> CoW copies
+    assert kv.stats["cow_copies"] == 1
+    assert kv.table[1, 1] != kv.table[0, 1]    # diverged tail
+    assert kv.table[1, 0] == kv.table[0, 0]    # full first block stays shared
+    assert kv.ref[shared] == 1
+    # the copy carried the shared content
+    new = int(kv.table[1, 1])
+    assert (np.asarray(store["k"][0, new]) ==
+            np.asarray(store["k"][0, shared])).all()
+
+
+def test_oom_of_blocks_raises_clear_error(setup):
+    cfg, model, params = setup
+    rng = np.random.default_rng(5)
+    eng = ServeEngine(cfg, params, batch=2, max_len=64, paged=True,
+                      kv_block_size=4, kv_blocks=4)
+    eng.submit(Request(rid=0, prompt=rng.integers(0, cfg.vocab_size, 20,
+                                                  dtype=np.int32),
+                       max_tokens=4))
+    with pytest.raises(KVCacheOOM, match="blocks"):
+        eng.run()
+
+
+# ---------------------------------------------------------------------------
+# scheduler: work-scaled budget, starvation, router
+# ---------------------------------------------------------------------------
+
+
+def test_budget_scales_with_work_deep_queue_drains(setup):
+    """A deep queue of short requests needs more ticks than max_len - 1;
+    the paged engine's per-slot positions + work-scaled budget drain it
+    through slot recycling (the old fixed budget starved it)."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(6)
+    eng = ServeEngine(cfg, params, batch=1, max_len=16, paged=True,
+                      kv_block_size=4)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 3,
+                                               dtype=np.int32),
+                    max_tokens=4) for i in range(6)]
+    total_ticks = sum(len(r.prompt) - 1 + r.max_tokens for r in reqs)
+    assert total_ticks > eng.max_len - 1       # the old budget would starve
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == 6 and all(r.done for r in done)
+
+
+def test_contiguous_capacity_exhaustion_still_starves(setup):
+    """The contiguous path's shared tick is bounded by its lanes — the
+    work-scaled budget must not let it run past max_len."""
+    cfg, model, params = setup
+    eng = ServeEngine(cfg, params, batch=1, max_len=8)
+    eng.submit(Request(rid=7, prompt=np.arange(3, dtype=np.int32),
+                       max_tokens=50))
+    with pytest.raises(RuntimeError, match="pending"):
+        eng.run()
+    assert eng.starved == [7]
+
+
+def test_router_no_starvation_ragged_two_engines(setup):
+    cfg, model, params = setup
+    rng = np.random.default_rng(7)
+    router = Router.replicated(cfg, params, 2, batch=2, max_len=32,
+                               paged=True, kv_block_size=4)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, 3 + i % 5,
+                                        dtype=np.int32),
+                    max_tokens=2 + i % 3) for i in range(10)]
+    for r in reqs:
+        router.submit(r)
+    done = router.run()
+    assert len(done) == 10 and all(r.done for r in done)
+    assert router.starved == []
+    # queue-depth dispatch spread the ragged load over both engines
+    assert min(router.stats["per_engine"]) >= 3
+
+
+def test_router_prefix_affinity(setup):
+    """Requests extending a prefix cached on one engine route to that
+    engine and skip replaying the cached blocks."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(8)
+    prefix = rng.integers(0, cfg.vocab_size, 12, dtype=np.int32)
+    router = Router.replicated(cfg, params, 2, batch=2, max_len=32,
+                               paged=True, kv_block_size=4)
+    router.engines[0].submit(Request(rid=99, prompt=prefix, max_tokens=1))
+    router.engines[0].run()                    # warm engine 0's prefix
+    for i in range(4):
+        tail = rng.integers(0, cfg.vocab_size, 2, dtype=np.int32)
+        idx = router.submit(Request(rid=i,
+                                    prompt=np.concatenate([prefix, tail]),
+                                    max_tokens=2))
+        assert idx == 0
+    assert router.stats["prefix_routed"] == 4
+    router.run()
+    assert router.prefix_skipped_tokens > 0
