@@ -44,7 +44,8 @@ def _bench_schedule(sched, args) -> dict:
         "interpreted_steps_per_s": 1.0 / t_int,
         "compiled_steps_per_s": 1.0 / t_cmp,
         "speedup": t_int / t_cmp,
-        "placed_calls": prog.placed_calls,
+        "placed_blocks": prog.placed_blocks,
+        "kernel_launches": prog.kernel_launches,
         "trace_count": prog.trace_count,
     }
 

@@ -1,0 +1,145 @@
+"""Grouped block-batched kernels vs per-block launches (beyond-paper).
+
+Runs the same placed schedules three ways — the eager per-block
+interpreter, the per-block compiled program (``group=False, fuse=False``,
+one ``pim_matmul`` pallas launch per placed block) and the grouped
+compiled program (one ``pim_matmul_grouped`` launch per placed node,
+independent same-shape equations fused) — recording steps/sec and the
+launch counters for each. Emits CSV rows and writes ``BENCH_fusion.json``
+next to the repo root so the launch/perf trajectory is recorded run over
+run.
+
+The ISSUE 5 acceptance bar is **deterministic**: the llama3-8b smoke
+placement must dispatch >= 8x fewer placed-matmul pallas launches under
+grouped execution than the per-block baseline (8 lm-head blocks -> 1
+grouped launch on the smoke decode). The assert raises on regression, so
+``benchmarks.run`` (and CI) exits non-zero.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+
+N_COMPILED = 10       # timed compiled iterations (after warmup)
+N_INTERP = 2          # timed interpreter iterations (they are slow)
+
+_OUT = pathlib.Path(__file__).resolve().parent.parent / "BENCH_fusion.json"
+
+
+def _time_fn(fn, n: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / n
+
+
+def _bench_schedule(sched, args) -> dict:
+    from repro import mapper
+
+    ex = mapper.ScheduleExecutor(sched)                    # per-block oracle
+    per_block = mapper.compile_schedule(sched, group=False, fuse=False,
+                                        use_cache=False)
+    grouped = mapper.compile_schedule(sched, use_cache=False)
+    t0 = time.perf_counter()                   # trace + XLA compile once
+    jax.block_until_ready(per_block(*args))
+    t_build_pb = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    jax.block_until_ready(grouped(*args))
+    t_build_gr = time.perf_counter() - t0
+    t_int = _time_fn(lambda: ex.run(*args), N_INTERP)
+    t_pb = _time_fn(lambda: per_block(*args), N_COMPILED)
+    t_gr = _time_fn(lambda: grouped(*args), N_COMPILED)
+    # NOTE on steady-state wall clock: interpret-mode pallas serializes a
+    # grouped kernel's G axis in one while-loop, where real hardware (and
+    # the "parallel" dimension_semantics on TPU) runs groups concurrently
+    # — exactly the subarray parallelism being modeled — while N separate
+    # per-block calls get multithreaded by XLA-CPU. Launch counts and
+    # build time are the faithful metrics here; per-step CPU time is an
+    # emulation artifact, recorded for the trajectory only.
+    return {
+        "interpreted_steps_per_s": 1.0 / t_int,
+        "per_block_steps_per_s": 1.0 / t_pb,
+        "grouped_steps_per_s": 1.0 / t_gr,
+        "per_block_build_s": t_build_pb,
+        "grouped_build_s": t_build_gr,
+        "placed_blocks": grouped.placed_blocks,
+        "per_block_matmul_launches": per_block.matmul_launches,
+        "grouped_matmul_launches": grouped.matmul_launches,
+        "per_block_total_launches": per_block.kernel_launches,
+        "grouped_total_launches": grouped.kernel_launches,
+        "matmul_launch_reduction": (per_block.matmul_launches
+                                    / max(1, grouped.matmul_launches)),
+    }
+
+
+def run() -> list[str]:
+    from repro import configs, mapper
+    from repro.configs.lenet5 import CONFIG as LENET_CONFIG
+    from repro.models import lenet
+    from repro.models.transformer import build_model
+
+    results: dict[str, dict] = {}
+
+    params = lenet.init_lenet(jax.random.PRNGKey(0), LENET_CONFIG)
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (4, 28, 28, 1),
+                             jnp.float32)
+    results["lenet5_forward"] = _bench_schedule(
+        mapper.map_lenet("serve", batch=4), (params, imgs))
+
+    cfg = configs.get_smoke_config("llama3-8b")
+    model = build_model(cfg)
+    lp = model.init(jax.random.PRNGKey(0))
+    cache = model.init_cache(2, 32)
+    tok = jnp.array([3, 5], jnp.int32)
+
+    def decode(lp, cache, tok, pos):
+        return model.decode_step(lp, cache, tok, pos)
+
+    sched = mapper.build_schedule(decode, mapper.abstract_like(lp),
+                                  mapper.abstract_like(cache),
+                                  mapper.abstract_like(tok),
+                                  jax.ShapeDtypeStruct((), jnp.int32))
+    results["llama3_8b_decode"] = _bench_schedule(
+        sched, (lp, cache, tok, jnp.int32(0)))
+
+    _OUT.write_text(json.dumps(results, indent=2, sort_keys=True) + "\n")
+
+    # deterministic acceptance gate: the launch-count reduction is a
+    # property of the baked programs, not of wall-clock noise —
+    # benchmarks.run exits non-zero on a raise, so a regression fails CI
+    red = results["llama3_8b_decode"]["matmul_launch_reduction"]
+    assert red >= 8, (
+        f"llama3-8b smoke decode: grouped execution reduced placed-matmul "
+        f"launches only {red:.1f}x (per-block "
+        f"{results['llama3_8b_decode']['per_block_matmul_launches']} -> "
+        f"grouped {results['llama3_8b_decode']['grouped_matmul_launches']}), "
+        f"below the 8x acceptance bar")
+
+    rows: list[str] = []
+    for tag, r in results.items():
+        rows += [
+            f"fusion.{tag}.interp_steps_per_s,"
+            f"{r['interpreted_steps_per_s']:.3f},",
+            f"fusion.{tag}.per_block_steps_per_s,"
+            f"{r['per_block_steps_per_s']:.3f},",
+            f"fusion.{tag}.grouped_steps_per_s,"
+            f"{r['grouped_steps_per_s']:.3f},",
+            f"fusion.{tag}.per_block_build_s,"
+            f"{r['per_block_build_s']:.3f},trace + XLA compile",
+            f"fusion.{tag}.grouped_build_s,"
+            f"{r['grouped_build_s']:.3f},trace + XLA compile",
+            f"fusion.{tag}.per_block_matmul_launches,"
+            f"{r['per_block_matmul_launches']},one per placed block",
+            f"fusion.{tag}.grouped_matmul_launches,"
+            f"{r['grouped_matmul_launches']},one per placed node (or fused)",
+            f"fusion.{tag}.matmul_launch_reduction,"
+            f"{r['matmul_launch_reduction']:.1f},"
+            + ("target>=8" if tag == "llama3_8b_decode" else ""),
+        ]
+    rows.append(f"fusion.json,{_OUT.name},launch/perf trajectory artifact")
+    return rows

@@ -25,6 +25,7 @@ MODULES = (
     "kernel_bench",
     "mapper_bench",
     "executor_bench",
+    "fusion_bench",
     "pipeline_bench",
     "serve_bench",
 )

@@ -14,6 +14,15 @@ h // (H/G)) — no repeated-KV materialization. Fully-masked blocks
 Validated against ``ref.flash_attention_ref`` in interpret mode across a
 shape/dtype sweep; ``repro.models.attention.flash_attention_xla`` is the
 mathematically identical XLA fallback used on non-TPU backends.
+
+``paged_decode_attention_grouped`` extends the same grouped-launch idea
+to paged-KV decode serving: one ``pallas_call`` covers *every* batch
+slot, gathering each slot's KV blocks straight out of the shared block
+pool through a scalar-prefetched block table (the index map reads
+``table[b, w]``, so blocks stream in table order with no materialized
+[B, W*bs, G, D] gather) and carrying the online-softmax state in VMEM
+scratch across the block axis. Multi-slot decode thus pays one dispatch
+per tick, not one gather chain per slot/site.
 """
 
 from __future__ import annotations
@@ -113,3 +122,109 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         interpret=interpret,
     )(qt, kt, vt)
     return jnp.moveaxis(out, 1, 2)        # [B,S,H,D]
+
+
+# ---------------------------------------------------------------------------
+# grouped paged-KV decode attention (one launch for all batch slots)
+# ---------------------------------------------------------------------------
+
+
+def _paged_decode_kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc_ref, m_ref, l_ref, *, bs: int, n_w: int,
+                         scale: float):
+    b = pl.program_id(0)
+    w = pl.program_id(2)
+
+    @pl.when(w == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    p = pos_ref[b]
+
+    # skip blocks entirely past the slot's position (their table entries
+    # clamp to the scratch block — garbage that must not join the max)
+    @pl.when(w * bs <= p)
+    def _compute():
+        q = q_ref[0, 0]                    # [R, D]
+        k = k_ref[0, :, 0, :]              # [bs, D]
+        v = v_ref[0, :, 0, :]
+        sc = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        k_pos = w * bs + jax.lax.broadcasted_iota(jnp.int32, sc.shape, 1)
+        sc = jnp.where(k_pos <= p, sc, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, sc.max(axis=-1, keepdims=True))
+        pr = jnp.exp(sc - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + pr.sum(axis=-1, keepdims=True)
+        acc_ref[...] = (acc_ref[...] * alpha
+                        + jnp.dot(pr.astype(v.dtype), v,
+                                  preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(w == n_w - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-20)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_grouped(q: jnp.ndarray, k_store: jnp.ndarray,
+                                   v_store: jnp.ndarray,
+                                   block_table: jnp.ndarray,
+                                   pos: jnp.ndarray, *,
+                                   interpret: bool = True) -> jnp.ndarray:
+    """Decode attention over a paged KV pool for all slots in one launch.
+
+    q: [B, H, D] (one new token per slot); k/v_store: [N, bs, G, D] (the
+    shared block pool, new token already scattered in); block_table:
+    [B, W] int32 physical block ids (invalid entries clamped to the
+    scratch block); pos: [B] int32 per-slot positions. Returns
+    [B, H, D].
+
+    Grid (B, G, W): the slot/kv-head axes are the group dimensions, the
+    block axis is innermost-sequential so the online-softmax scratch
+    (acc, m, l) carries across a slot's blocks. KV blocks are fetched via
+    scalar-prefetch — the k/v index map reads ``block_table[b, w]`` — so
+    the gather happens in the kernel's block streaming, not as a
+    per-slot XLA gather chain.
+    """
+    b, h, d = q.shape
+    n_blocks, bs, g, _ = k_store.shape
+    w = block_table.shape[1]
+    rep = h // g
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, g, rep, d)
+
+    out = pl.pallas_call(
+        functools.partial(_paged_decode_kernel, bs=bs, n_w=w, scale=scale),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b, g, w),
+            in_specs=[
+                pl.BlockSpec((1, 1, rep, d),
+                             lambda ib, ig, iw, tbl, pos: (ib, ig, 0, 0)),
+                pl.BlockSpec((1, bs, 1, d),
+                             lambda ib, ig, iw, tbl, pos:
+                             (tbl[ib, iw], 0, ig, 0)),
+                pl.BlockSpec((1, bs, 1, d),
+                             lambda ib, ig, iw, tbl, pos:
+                             (tbl[ib, iw], 0, ig, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, rep, d),
+                                   lambda ib, ig, iw, tbl, pos:
+                                   (ib, ig, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((rep, d), jnp.float32),
+                pltpu.VMEM((rep, 1), jnp.float32),
+                pltpu.VMEM((rep, 1), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, g, rep, d), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), pos.astype(jnp.int32), qg, k_store,
+      v_store)
+    return out.reshape(b, h, d)

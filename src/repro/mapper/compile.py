@@ -17,6 +17,18 @@ what comes out is one ordinary JAX function —
 so ``Trainer(backend="pim")`` and ``ServeEngine(backend="pim")`` can run
 their steps *through the placement* instead of plain ``jax.jit``.
 
+Compiled programs execute **grouped**: each placed node's whole block
+grid rides one ``pim_matmul_grouped`` launch (with ``fuse=True``,
+independent same-shape placed equations are additionally coalesced
+across equation boundaries), so the baked program dispatches roughly one
+kernel per placed node instead of one per block — see
+``repro.mapper.lowering``. ``placed_blocks`` counts block-level work,
+``kernel_launches`` the actual dispatches; the eager interpreter stays
+the per-block oracle (``group=False``) and grouped results are
+bit-identical to it. Pass ``group=False, fuse=False`` to compile the
+legacy one-launch-per-block program (the baseline
+``benchmarks/fusion_bench.py`` measures against).
+
 Programs are cached by ``(fn, input avals, placement signature, kernel
 knobs)``: compiling the same schedule twice returns the identical
 ``CompiledProgram`` object, whose ``jax.jit`` cache is already warm —
@@ -75,13 +87,33 @@ class CompiledProgram:
         return self.jitted(*args, **kwargs)
 
     @property
+    def placed_blocks(self) -> int:
+        """Placed block matmuls baked into the program (work, totalled
+        over traces)."""
+        return self.ctx.placed_blocks
+
+    @property
     def placed_calls(self) -> int:
-        """pim_matmul calls baked into the program (totalled over traces)."""
-        return self.ctx.placed_calls
+        """Deprecated alias of ``placed_blocks``."""
+        return self.ctx.placed_blocks
 
     @property
     def eltwise_calls(self) -> int:
         return self.ctx.eltwise_calls
+
+    @property
+    def kernel_launches(self) -> int:
+        """Actual ``pallas_call`` dispatches baked into the program
+        (grouped/fused launches count once)."""
+        return self.ctx.kernel_launches
+
+    @property
+    def matmul_launches(self) -> int:
+        return self.ctx.matmul_launches
+
+    @property
+    def eltwise_launches(self) -> int:
+        return self.ctx.eltwise_launches
 
     def verify(self, *args, rtol: float = 1e-4, atol: float = 1e-4,
                **kwargs) -> float:
@@ -122,7 +154,7 @@ _STATS = {"hits": 0, "misses": 0}
 
 
 def _program_key(schedule: Schedule, block: int, interpret: bool,
-                 boundaries: tuple = ()) -> tuple:
+                 group: bool, fuse: bool, boundaries: tuple = ()) -> tuple:
     closed = schedule.graph.closed_jaxpr
     avals = tuple((tuple(v.aval.shape), str(v.aval.dtype))
                   for v in closed.jaxpr.invars)
@@ -132,7 +164,7 @@ def _program_key(schedule: Schedule, block: int, interpret: bool,
     # tile/chip geometry), so same-grid placements on different machines
     # get distinct keys
     return (fn_key, avals, schedule.placement.signature(),
-            block, interpret, boundaries)
+            block, interpret, group, fuse, boundaries)
 
 
 def program_cache_stats() -> dict[str, int]:
@@ -151,18 +183,21 @@ def clear_program_cache() -> None:
 
 
 def compile_schedule(schedule: Schedule, *, block: int = 128,
-                     interpret: bool = True,
+                     interpret: bool = True, group: bool = True,
+                     fuse: bool = True,
                      use_cache: bool = True) -> CompiledProgram:
     """Lower ``schedule`` into one jittable, differentiable function.
 
     The returned :class:`CompiledProgram` is callable with exactly the
     arguments the schedule's fn was traced with (pytrees welcome). The
     first call traces once — the Python jaxpr walk runs under the trace
-    and bakes every placed node's blocked kernel calls into a single XLA
-    program; subsequent same-shape calls replay the compiled executable.
+    and bakes every placed node's grouped kernel launch (one per node;
+    fewer with ``fuse``) into a single XLA program; subsequent same-shape
+    calls replay the compiled executable. ``group=False, fuse=False``
+    bakes the legacy one-launch-per-block program instead.
     """
     if use_cache:
-        key = _program_key(schedule, block, interpret)
+        key = _program_key(schedule, block, interpret, group, fuse)
         hit = _CACHE.get(key)
         if hit is not None:
             _STATS["hits"] += 1
@@ -170,7 +205,8 @@ def compile_schedule(schedule: Schedule, *, block: int = 128,
             return hit
         _STATS["misses"] += 1
 
-    ctx = LoweringContext(schedule, block=block, interpret=interpret)
+    ctx = LoweringContext(schedule, block=block, interpret=interpret,
+                          group=group, fuse=fuse)
     closed = schedule.graph.closed_jaxpr
     in_tree = schedule.graph.in_tree
     out_tree = schedule.graph.out_tree
@@ -251,12 +287,29 @@ class PartitionedProgram:
         return len(self.stages)
 
     @property
+    def placed_blocks(self) -> int:
+        return self.ctx.placed_blocks
+
+    @property
     def placed_calls(self) -> int:
-        return self.ctx.placed_calls
+        """Deprecated alias of ``placed_blocks``."""
+        return self.ctx.placed_blocks
 
     @property
     def eltwise_calls(self) -> int:
         return self.ctx.eltwise_calls
+
+    @property
+    def kernel_launches(self) -> int:
+        return self.ctx.kernel_launches
+
+    @property
+    def matmul_launches(self) -> int:
+        return self.ctx.matmul_launches
+
+    @property
+    def eltwise_launches(self) -> int:
+        return self.ctx.eltwise_launches
 
     def flatten_args(self, *args, **kwargs) -> list:
         """Flatten a call's arguments exactly like the program does,
@@ -297,7 +350,8 @@ def _aval_bits(v) -> int:
 
 def compile_partitioned(schedule: Schedule, *,
                         partitions: int | None = None, block: int = 128,
-                        interpret: bool = True,
+                        interpret: bool = True, group: bool = True,
+                        fuse: bool = True,
                         use_cache: bool = True) -> PartitionedProgram:
     """Lower ``schedule`` into one jittable program per pipeline partition.
 
@@ -318,7 +372,8 @@ def compile_partitioned(schedule: Schedule, *,
     boundaries = tuple((p.eqn_start, p.eqn_end) for p in parts)
 
     if use_cache:
-        key = _program_key(schedule, block, interpret, boundaries)
+        key = _program_key(schedule, block, interpret, group, fuse,
+                           boundaries)
         hit = _CACHE.get(key)
         if hit is not None and isinstance(hit, PartitionedProgram):
             _STATS["hits"] += 1
@@ -326,7 +381,8 @@ def compile_partitioned(schedule: Schedule, *,
             return hit
         _STATS["misses"] += 1
 
-    ctx = LoweringContext(schedule, block=block, interpret=interpret)
+    ctx = LoweringContext(schedule, block=block, interpret=interpret,
+                          group=group, fuse=fuse)
     closed = schedule.graph.closed_jaxpr
     jaxpr = closed.jaxpr
     consts_by_var = dict(zip(jaxpr.constvars, closed.consts))

@@ -11,13 +11,18 @@ reshapes, nonlinearities, control flow) falls back to the primitive's bind,
 so any traceable fn executes and the output must match ``jax.jit(fn)`` to
 fp32 tolerance.
 
-This eager per-equation walk is the **debugging/verification mode** — and
-the oracle the compiled path (``repro.mapper.compile``) must match
-bit-for-fp32, since both paths evaluate the identical rule table; the
-compiler just runs the walk once at trace time under ``jax.jit``.
+This eager per-equation, per-block walk is the **debugging/verification
+mode** — and the *per-block oracle* the compiled path
+(``repro.mapper.compile``) must match: the compiler evaluates the identical
+rule table but with ``group=True``/``fuse=True``, stacking each node's
+blocks into one ``pim_matmul_grouped`` launch. Grouped execution is
+constructed to be bit-identical to this oracle (same per-block tile
+shapes, same fold order — see ``repro.mapper.lowering``), so
+``tests/test_grouped.py`` asserts exact equality, not tolerance.
 
-``placed_calls`` / ``eltwise_calls`` count the kernel-routed executions so
-tests can assert the PIM path actually ran.
+``placed_blocks`` / ``eltwise_calls`` count the kernel-routed work and
+``kernel_launches`` the pallas dispatches, so tests can assert the PIM
+path actually ran (here launches == blocks + eltwise by construction).
 """
 
 from __future__ import annotations
@@ -33,24 +38,49 @@ from repro.mapper.schedule import Schedule
 
 @dataclasses.dataclass
 class ScheduleExecutor:
-    """Run ``schedule`` numerically; see module docstring."""
+    """Run ``schedule`` numerically; see module docstring.
+
+    ``group``/``fuse`` default to False — the executor is the per-block
+    oracle. Flip them to interpret eagerly through the grouped kernels
+    (mostly useful for debugging the grouped path itself).
+    """
 
     schedule: Schedule
     interpret: bool = True
     block: int = 128              # pallas tile edge (pad-to multiple)
+    group: bool = False
+    fuse: bool = False
 
     def __post_init__(self):
         self._ctx = LoweringContext(self.schedule, block=self.block,
-                                    interpret=self.interpret)
+                                    interpret=self.interpret,
+                                    group=self.group, fuse=self.fuse)
 
-    # kernel-routed call counters live on the shared lowering context
+    # kernel-routed work/dispatch counters live on the shared lowering ctx
+    @property
+    def placed_blocks(self) -> int:
+        return self._ctx.placed_blocks
+
     @property
     def placed_calls(self) -> int:
-        return self._ctx.placed_calls
+        """Deprecated alias of ``placed_blocks``."""
+        return self._ctx.placed_blocks
 
     @property
     def eltwise_calls(self) -> int:
         return self._ctx.eltwise_calls
+
+    @property
+    def kernel_launches(self) -> int:
+        return self._ctx.kernel_launches
+
+    @property
+    def matmul_launches(self) -> int:
+        return self._ctx.matmul_launches
+
+    @property
+    def eltwise_launches(self) -> int:
+        return self._ctx.eltwise_launches
 
     # -- public API ---------------------------------------------------------
 

@@ -4,12 +4,35 @@ Both execution modes of a :class:`~repro.mapper.schedule.Schedule` share
 this module, so the matmul/conv/eltwise lowering logic exists exactly once:
 
   * the **interpreter** (``repro.mapper.executor``) calls
-    :func:`eval_placed` with concrete arrays — eager per-equation dispatch,
-    the debugging/verification mode and the oracle;
+    :func:`eval_placed` with concrete arrays — eager per-equation dispatch
+    with ``group=False``: one ``pim_matmul`` launch **per placed block**,
+    the debugging/verification mode and the bit-level oracle;
   * the **compiler** (``repro.mapper.compile``) calls the same
-    :func:`eval_placed` with tracers under ``jax.jit`` — the Python walk
-    runs once at trace time and the placed rewrites are baked into a
-    single XLA program.
+    :func:`eval_placed` with tracers under ``jax.jit`` and ``group=True``:
+    the Python walk runs once at trace time and each placed node's whole
+    block grid is stacked into **one** ``pim_matmul_grouped`` launch — the
+    paper's subarrays computing all placed blocks in parallel, instead of
+    an O(blocks) chain of launches and scatter-adds.
+
+Grouped execution is constructed to be *bit-identical* to the per-block
+oracle: every group accumulates its K axis with the same tile sizes and
+order a standalone ``pim_matmul`` would, extra zero-padding contributes
+exact fp zeros, and the cross-row-block reduction is an explicit
+ascending left-fold — the same association order as the oracle's
+scatter-add chain.
+
+With ``fuse=True`` (the compiler default) the walk additionally coalesces
+*independent* placed equations across equation boundaries: same-shape
+placed matmuls whose operands are all already computed ride one grouped
+launch (q/k/v-projection style), and whole waves of ready eltwise
+add/sub/mul equations (optimizer updates across parameter leaves) ride
+one ``pim_mac_grouped`` launch. Fusion only ever *reorders* equations
+whose inputs were already available, so values are unchanged.
+
+``placed_blocks`` counts block-level work, ``kernel_launches`` counts
+actual ``pallas_call`` dispatches — under the per-block oracle they are
+equal (plus eltwise); under grouped execution launches collapse to
+roughly one per placed node.
 
 Rules are keyed by the node kind from ``repro.core.estimator.NODE_KINDS``
 (the shared registry); a rule returns the lowered outputs or ``None`` to
@@ -46,7 +69,8 @@ import jax.numpy as jnp
 
 from repro.core import estimator
 from repro.core.estimator import CALL_PRIMS, inner_jaxpr
-from repro.kernels.pim_mac import pim_mac, pim_matmul
+from repro.kernels.pim_mac import (pim_mac, pim_mac_grouped, pim_matmul,
+                                   pim_matmul_grouped)
 
 
 def _pad_to(x: jnp.ndarray, mults: tuple[int, int]) -> jnp.ndarray:
@@ -61,21 +85,45 @@ def _pad_to(x: jnp.ndarray, mults: tuple[int, int]) -> jnp.ndarray:
 class LoweringContext:
     """Schedule + kernel knobs + call counters, threaded through the rules.
 
-    ``placed_calls`` / ``eltwise_calls`` count kernel-routed executions.
-    Under the interpreter they count per run; under the compiler they
-    count per *trace* (the kernel calls baked into the program).
+    ``group=False`` is the per-block oracle (one launch per placed block,
+    the interpreter's mode); ``group=True`` stacks each node's blocks into
+    one grouped launch. ``fuse=True`` additionally coalesces independent
+    same-shape placed equations across equation boundaries (requires
+    ``group=True``; the compiler's mode).
+
+    Counters: ``placed_blocks`` / ``eltwise_calls`` count kernel-routed
+    *work* (block matmuls resp. eltwise equations); ``matmul_launches``
+    / ``eltwise_launches`` count actual ``pallas_call`` dispatches per
+    kind, with ``kernel_launches`` their sum. Under the interpreter they
+    count per run; under the compiler they count per *trace* (the kernel
+    calls baked into the program). ``placed_calls`` remains as a
+    deprecated alias of ``placed_blocks``.
     """
 
     schedule: Any                 # repro.mapper.schedule.Schedule
     block: int = 128              # pallas tile edge (pad-to multiple)
     interpret: bool = True
-    placed_calls: int = 0
+    group: bool = True            # grouped launches (False = per-block)
+    fuse: bool = True             # cross-equation coalescing
+    placed_blocks: int = 0
     eltwise_calls: int = 0
+    matmul_launches: int = 0
+    eltwise_launches: int = 0
 
     def __post_init__(self):
         self.node_by_eqn = {nd.eqn_id: nd
                             for nd in self.schedule.graph.nodes}
         self._subtree_cache: dict[int, bool] = {}
+
+    @property
+    def kernel_launches(self) -> int:
+        """All ``pallas_call`` dispatches (matmul + eltwise)."""
+        return self.matmul_launches + self.eltwise_launches
+
+    @property
+    def placed_calls(self) -> int:
+        """Deprecated alias of ``placed_blocks``."""
+        return self.placed_blocks
 
     def subtree_has_placed(self, jaxpr) -> bool:
         """True if any equation reachable from ``jaxpr`` is a graph node."""
@@ -92,11 +140,82 @@ class LoweringContext:
 # ---------------------------------------------------------------------------
 
 
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _grouped_operands(ctx: LoweringContext, node_idx: int, a2, b2):
+    """Pad once and stack a node's placed block operands.
+
+    The node's stationary weight is a (row_blocks x col_blocks) grid of
+    subarray-sized blocks; this builds the stacked grouped operands
+    ``a_g (R, mp, Kb)`` (one activation slab per *row* chunk — the kernel
+    fans each slab out to its C column groups through the shared-A index
+    map, so activations are never replicated) and ``b_g (R*C, Kb, Nb)``
+    (replica 0 — replicas are throughput copies holding identical
+    weights), padded to ``ctx.block`` multiples exactly as the per-block
+    path pads each block. Returns ``(a_g, b_g, meta)``; ``meta`` feeds
+    :func:`_grouped_reduce`.
+    """
+    np_ = ctx.schedule.placement.node_placements[node_idx]
+    sub = ctx.schedule.hierarchy.subarray
+    br, bc = sub.weight_rows, sub.weight_cols
+    R, C = np_.row_blocks, np_.col_blocks
+    m, k = a2.shape
+    n = b2.shape[1]
+    blk = ctx.block
+    h = br if R > 1 else k            # per-row-chunk height (values)
+    w = bc if C > 1 else n            # per-col-chunk width (values)
+    mp, kb, nb = _round_up(m, blk), _round_up(h, blk), _round_up(w, blk)
+    a2 = a2.astype(jnp.float32)
+    b2 = b2.astype(jnp.float32)
+    if mp - m or R * h - k:
+        a2 = jnp.pad(a2, ((0, mp - m), (0, R * h - k)))
+    a_ch = jnp.moveaxis(a2.reshape(mp, R, h), 1, 0)       # (R, mp, h)
+    if kb - h:
+        a_ch = jnp.pad(a_ch, ((0, 0), (0, 0), (0, kb - h)))
+    if R * h - k or C * w - n:
+        b2 = jnp.pad(b2, ((0, R * h - k), (0, C * w - n)))
+    b_ch = b2.reshape(R, h, C, w).transpose(0, 2, 1, 3)   # (R, C, h, w)
+    if kb - h or nb - w:
+        b_ch = jnp.pad(b_ch, ((0, 0), (0, 0), (0, kb - h), (0, nb - w)))
+    b_g = b_ch.reshape(R * C, kb, nb)
+    return a_ch, b_g, (R, C, m, n, w)
+
+
+def _grouped_reduce(out_g: jnp.ndarray, meta) -> jnp.ndarray:
+    """(G, mp, Nb) grouped partial products -> (m, n): one segment-sum
+    over the row-block axis per output column-block, then stitch the
+    column blocks. The fold is explicit and ascending so the result is
+    bit-identical to the oracle's per-block scatter-add chain."""
+    R, C, m, n, w = meta
+    out4 = out_g.reshape(R, C, out_g.shape[1], out_g.shape[2])
+    col = out4[0]
+    for i in range(1, R):
+        col = col + out4[i]
+    col = col[:, :m, :w]                                   # (C, m, w)
+    return jnp.swapaxes(col, 0, 1).reshape(m, C * w)[:, :n]
+
+
 def blocked_matmul(ctx: LoweringContext, node_idx: int, a2: jnp.ndarray,
                    b2: jnp.ndarray) -> jnp.ndarray:
-    """A (m,k) @ B (k,n) as one pim_matmul per placed block of B,
-    accumulating partial products across row (k) blocks — replica 0;
-    replicas are throughput copies holding identical weights."""
+    """A (m,k) @ B (k,n) through the node's placed block grid — replica 0;
+    replicas are throughput copies holding identical weights.
+
+    ``ctx.group=True``: one ``pim_matmul_grouped`` launch over the stacked
+    blocks + a single segment-sum per output column-block.
+    ``ctx.group=False``: the per-block oracle — one ``pim_matmul`` launch
+    per placed block, partial products scatter-added in block order.
+    """
+    if ctx.group:
+        a_g, b_g, meta = _grouped_operands(ctx, node_idx, a2, b2)
+        out_g = pim_matmul_grouped(a_g, b_g, bm=ctx.block, bn=ctx.block,
+                                   bk=ctx.block, interpret=ctx.interpret,
+                                   col_groups=meta[1])
+        ctx.placed_blocks += b_g.shape[0]
+        ctx.matmul_launches += 1
+        return _grouped_reduce(out_g, meta)
+
     np_ = ctx.schedule.placement.node_placements[node_idx]
     m, _ = a2.shape
     _, n = b2.shape
@@ -112,7 +231,8 @@ def blocked_matmul(ctx: LoweringContext, node_idx: int, a2: jnp.ndarray,
                           interpret=ctx.interpret)
         out = out.at[:, blk.col0:blk.col0 + blk.n_cols].add(
             part[:m, :blk.n_cols])
-        ctx.placed_calls += 1
+        ctx.placed_blocks += 1
+        ctx.matmul_launches += 1
     return out
 
 
@@ -121,7 +241,9 @@ def blocked_matmul(ctx: LoweringContext, node_idx: int, a2: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 
-def lower_dot(ctx: LoweringContext, eqn, node, invals):
+def _dot_operands(eqn, invals):
+    """(a2, b2) 2-D operands of a lowerable ``dot_general``, else None.
+    Shared by :func:`lower_dot` and the cross-equation fusion scanner."""
     lhs, rhs = invals
     aval = eqn.outvars[0].aval
     if not jnp.issubdtype(aval.dtype, jnp.floating):
@@ -139,7 +261,15 @@ def lower_dot(ctx: LoweringContext, eqn, node, invals):
     else:
         return None
     b2 = rhs if rc[0] == 0 else rhs.T
-    out = blocked_matmul(ctx, node.idx, a2, b2)
+    return a2, b2
+
+
+def lower_dot(ctx: LoweringContext, eqn, node, invals):
+    ops = _dot_operands(eqn, invals)
+    if ops is None:
+        return None
+    aval = eqn.outvars[0].aval
+    out = blocked_matmul(ctx, node.idx, *ops)
     return [out.reshape(aval.shape).astype(aval.dtype)]
 
 
@@ -175,7 +305,10 @@ def lower_conv(ctx: LoweringContext, eqn, node, invals):
     return [out.astype(eqn.outvars[0].aval.dtype)]
 
 
-def lower_eltwise(ctx: LoweringContext, eqn, node, invals):
+def _eltwise_operands(eqn, node, invals):
+    """``(a, b, acc)`` with out = acc + a*b for a lowerable eltwise
+    equation, broadcasts resolved, else None. Shared by
+    :func:`lower_eltwise` and the eltwise fusion scanner."""
     if len(invals) != 2:
         return None          # unary prims registered via register_node_kind
     a, b = invals
@@ -188,17 +321,25 @@ def lower_eltwise(ctx: LoweringContext, eqn, node, invals):
     one = jnp.ones_like(a)
     op = node.op
     if op == "add":        # b + a*1
-        out = pim_mac(a, one, b, interpret=ctx.interpret)
-    elif op == "sub":      # a + b*(-1)
-        out = pim_mac(b, -one, a, interpret=ctx.interpret)
-    elif op == "mul":      # 0 + a*b
-        out = pim_mac(a, b, jnp.zeros_like(a), interpret=ctx.interpret)
-    else:
-        # div as a*(1/b) diverges from lax.div when 1/b overflows or
-        # rounds; keep the jit-match contract via the numeric fallback
+        return a, one, b
+    if op == "sub":        # a + b*(-1)
+        return b, -one, a
+    if op == "mul":        # 0 + a*b
+        return a, b, jnp.zeros_like(a)
+    # div as a*(1/b) diverges from lax.div when 1/b overflows or
+    # rounds; keep the jit-match contract via the numeric fallback
+    return None
+
+
+def lower_eltwise(ctx: LoweringContext, eqn, node, invals):
+    triple = _eltwise_operands(eqn, node, invals)
+    if triple is None:
         return None
+    a, b, acc = triple
+    out = pim_mac(a, b, acc, interpret=ctx.interpret)
     ctx.eltwise_calls += 1
-    return [out.astype(aval.dtype)]
+    ctx.eltwise_launches += 1
+    return [out.astype(eqn.outvars[0].aval.dtype)]
 
 
 # keyed by the estimator registry's node kinds — one rule per kind
@@ -213,6 +354,115 @@ assert set(RULES) == set(estimator.NODE_KINDS.values()), (
 
 
 # ---------------------------------------------------------------------------
+# cross-equation fusion (compiler mode): coalesce independent placed
+# equations whose operands are all already computed into one launch
+# ---------------------------------------------------------------------------
+
+
+def _dot_meta(eqn):
+    """Shape/dnums/dtype signature deciding fusability from eqn metadata
+    alone — equal signatures (given an accepted lead) guarantee
+    ``_dot_operands`` succeeds with identically-shaped operands, so the
+    scanner never builds traced operands for rejected candidates."""
+    return (tuple(eqn.invars[0].aval.shape), tuple(eqn.invars[1].aval.shape),
+            eqn.params["dimension_numbers"], eqn.outvars[0].aval.dtype)
+
+
+def _fuse_matmuls(ctx: LoweringContext, lead, peers, env, fused, read,
+                  ready, node, invals):
+    """Coalesce the placed matmul ``lead`` with every *later* placed
+    matmul equation (``peers``, the pre-filtered candidate tail) that
+    (a) has no pending data dependence (all invars already computed —
+    mutual independence follows), and (b) lowers to the same stacked
+    block-grid shape. Returns the leader's outputs after writing the
+    peers' outputs into ``env``, or None to decline."""
+    ops = _dot_operands(lead, invals)
+    if ops is None:
+        return None
+    placements = ctx.schedule.placement.node_placements
+    np0 = placements[node.idx]
+    key = (_dot_meta(lead), np0.row_blocks, np0.col_blocks)
+    group = [(lead, node, ops)]
+    for e2 in peers:
+        if id(e2) in fused or not ready(e2):
+            continue
+        nd2 = ctx.node_by_eqn[id(e2)]
+        np2 = placements.get(nd2.idx)
+        if np2 is None or (_dot_meta(e2), np2.row_blocks,
+                           np2.col_blocks) != key:
+            continue
+        group.append((e2, nd2,
+                      _dot_operands(e2, [read(v) for v in e2.invars])))
+    if len(group) == 1:
+        return None                  # nothing to fuse; plain grouped rule
+    stacked = [_grouped_operands(ctx, nd.idx, a2, b2)
+               for _, nd, (a2, b2) in group]
+    g_per = stacked[0][1].shape[0]
+    cols = stacked[0][2][1]          # shared C (same block grid by key)
+    a_all = jnp.concatenate([s[0] for s in stacked])
+    b_all = jnp.concatenate([s[1] for s in stacked])
+    out_all = pim_matmul_grouped(a_all, b_all, bm=ctx.block, bn=ctx.block,
+                                 bk=ctx.block, interpret=ctx.interpret,
+                                 col_groups=cols)
+    ctx.placed_blocks += b_all.shape[0]
+    ctx.matmul_launches += 1
+    outs0 = None
+    for i, ((e2, _, _), (_, _, meta)) in enumerate(zip(group, stacked)):
+        out = _grouped_reduce(out_all[i * g_per:(i + 1) * g_per], meta)
+        aval = e2.outvars[0].aval
+        lowered = [out.reshape(aval.shape).astype(aval.dtype)]
+        if i == 0:
+            outs0 = lowered
+        else:
+            jax.util.safe_map(env.__setitem__, e2.outvars, lowered)
+            fused.add(id(e2))
+    return outs0
+
+
+def _fuse_eltwise(ctx: LoweringContext, lead, peers, env, fused, read,
+                  ready, node, invals):
+    """Coalesce the whole *ready wave* of eltwise equations starting at
+    ``lead`` — every later add/sub/mul (``peers``, the pre-filtered
+    candidate tail) whose operands are already computed (optimizer
+    updates across parameter leaves are the classic case) — into a
+    single ragged ``pim_mac_grouped`` launch."""
+    triple = _eltwise_operands(lead, node, invals)
+    if triple is None:
+        return None
+    dtype = lead.outvars[0].aval.dtype
+    group = [(lead, triple)]
+    for e2 in peers:
+        if id(e2) in fused or not ready(e2):
+            continue
+        nd2 = ctx.node_by_eqn[id(e2)]
+        # metadata-only acceptance: operands are built for members, never
+        # for rejected candidates (no dead traced broadcasts/ones/zeros)
+        aval2 = e2.outvars[0].aval
+        if (len(e2.invars) != 2 or aval2.dtype != dtype or not aval2.size
+                or nd2.op not in ("add", "sub", "mul")):
+            continue
+        group.append((e2, _eltwise_operands(e2, nd2,
+                                            [read(v) for v in e2.invars])))
+    if len(group) == 1:
+        return None
+    outs = pim_mac_grouped([t for _, t in group], interpret=ctx.interpret)
+    ctx.eltwise_calls += len(group)
+    ctx.eltwise_launches += 1
+    outs0 = None
+    for i, ((e2, _), out) in enumerate(zip(group, outs)):
+        lowered = [out.astype(e2.outvars[0].aval.dtype)]
+        if i == 0:
+            outs0 = lowered
+        else:
+            jax.util.safe_map(env.__setitem__, e2.outvars, lowered)
+            fused.add(id(e2))
+    return outs0
+
+
+_FUSERS = {"matmul": _fuse_matmuls, "eltwise": _fuse_eltwise}
+
+
+# ---------------------------------------------------------------------------
 # the shared evaluator (eager interpreter == trace-time compiler)
 # ---------------------------------------------------------------------------
 
@@ -223,12 +473,38 @@ def eval_eqns(ctx: LoweringContext, eqns, env: dict) -> None:
     :func:`eval_placed` and the body of every per-partition stage program
     (``repro.mapper.compile.compile_partitioned`` slices one jaxpr's
     top-level equations into stages that each call this on their slice).
+
+    With ``ctx.fuse`` the walk may evaluate a later placed equation
+    *early*, fused into an earlier launch — only ever when all of its
+    inputs were already computed, so dataflow (and numerics) are
+    unchanged; its id lands in the ``fused`` set and its original slot is
+    skipped.
     """
 
     def read(v):
         return v.val if isinstance(v, jax.core.Literal) else env[v]
 
-    for eqn in eqns:
+    def ready(e) -> bool:
+        return all(isinstance(v, jax.core.Literal) or v in env
+                   for v in e.invars)
+
+    # pre-filter fusion candidates per kind once: each lead then scans
+    # only the later placed equations of its kind, not every equation
+    cands: dict[str, list] | None = None
+    cand_idx: dict[int, int] = {}
+    if ctx.group and ctx.fuse:
+        cands = {"matmul": [], "eltwise": []}
+        for e in eqns:
+            nd = ctx.node_by_eqn.get(id(e))
+            if nd is not None and nd.kind in cands:
+                lst = cands[nd.kind]
+                cand_idx[id(e)] = len(lst)
+                lst.append(e)
+
+    fused: set[int] = set()
+    for pos, eqn in enumerate(eqns):
+        if id(eqn) in fused:
+            continue
         invals = [read(v) for v in eqn.invars]
         name = eqn.primitive.name
         node = ctx.node_by_eqn.get(id(eqn))
@@ -248,7 +524,12 @@ def eval_eqns(ctx: LoweringContext, eqns, env: dict) -> None:
                 if ctx.subtree_has_placed(inner):
                     outs = eval_placed(ctx, inner, [], invals)
         if outs is None and node is not None:
-            outs = RULES[node.kind](ctx, eqn, node, invals)
+            if cands is not None and node.kind in cands:
+                peers = cands[node.kind][cand_idx[id(eqn)] + 1:]
+                outs = _FUSERS[node.kind](ctx, eqn, peers, env, fused,
+                                          read, ready, node, invals)
+            if outs is None:
+                outs = RULES[node.kind](ctx, eqn, node, invals)
         if outs is None:
             subfuns, bind_params = eqn.primitive.get_bind_params(eqn.params)
             ans = eqn.primitive.bind(*subfuns, *invals, **bind_params)

@@ -346,7 +346,8 @@ def init_paged_kv_cache(num_blocks: int, block_size: int, n_kv: int,
 
 
 def paged_decode_attention(x, params, cfg, cache: dict,
-                           block_table: jnp.ndarray, pos: jnp.ndarray):
+                           block_table: jnp.ndarray, pos: jnp.ndarray, *,
+                           use_kernel: bool = False):
     """x: [B, 1, D]; cache k/v: [num_blocks, block_size, G, hd];
     block_table: [B, W] physical block per logical block (invalid entries
     clamped to the scratch block); pos: [B] per-slot current length.
@@ -357,6 +358,13 @@ def paged_decode_attention(x, params, cfg, cache: dict,
     recycled slots restarting at position 0) are exact in one batched
     call. Validity comes from the per-slot position bound, exactly like
     the contiguous path's mask.
+
+    ``use_kernel=True`` routes the gather + score + softmax + value pass
+    through ``repro.kernels.paged_decode_attention_grouped`` — one Pallas
+    launch for every slot, KV blocks streamed through the
+    scalar-prefetched block table instead of a materialized
+    ``[B, W*bs, G, hd]`` XLA gather. The XLA path below stays the
+    numerics oracle.
     """
     b = x.shape[0]
     hd = cfg.resolved_head_dim
@@ -371,6 +379,13 @@ def paged_decode_attention(x, params, cfg, cache: dict,
     off = pos % bs
     k_store = cache["k"].at[blk, off].set(k_new[:, 0].astype(cache["k"].dtype))
     v_store = cache["v"].at[blk, off].set(v_new[:, 0].astype(cache["v"].dtype))
+    if use_kernel:
+        from repro.kernels.flash_attention import \
+            paged_decode_attention_grouped
+        att = paged_decode_attention_grouped(q[:, 0], k_store, v_store,
+                                             block_table, pos)
+        out = att.reshape(b, 1, cfg.n_heads * hd) @ params["wo"]
+        return out, {"k": k_store, "v": v_store}
     k = k_store[block_table].reshape(b, w * bs, cfg.n_kv_heads, hd)
     v = v_store[block_table].reshape(b, w * bs, cfg.n_kv_heads, hd)
     g = cfg.n_kv_heads
@@ -382,6 +397,58 @@ def paged_decode_attention(x, params, cfg, cache: dict,
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bgrqk,bkgd->bqgrd", probs, v)
     out = out.reshape(b, 1, cfg.n_heads * hd) @ params["wo"]
+    return out, {"k": k_store, "v": v_store}
+
+
+def paged_prefill_attention(x, params, cfg, cache: dict,
+                            table_row: jnp.ndarray, p0: jnp.ndarray,
+                            n_new: jnp.ndarray):
+    """Whole-prompt attention for one slot over the paged pool.
+
+    x: [1, T, D] — T new prompt tokens (padded; entries past ``n_new``
+    are don't-cares) occupying global positions ``p0 .. p0+n_new-1``;
+    ``table_row``: [W] the slot's physical block ids; ``p0`` the first
+    uncached position (block-aligned by construction: the engine admits
+    on whole cached prefix blocks). Returns (att [1, T, D], updated
+    cache).
+
+    The new tokens' K/V scatter into the slot's blocks in one shot
+    (padded tail entries land in the pinned scratch block); queries
+    attend causally over the cached prefix *and* the new tokens through
+    the same table gather the decode path uses, so the written KV — and
+    every downstream decode — is mathematically identical to replaying
+    the prompt token by token.
+    """
+    t = x.shape[1]
+    hd = cfg.resolved_head_dim
+    bs = cache["k"].shape[1]
+    w = table_row.shape[0]
+    gpos = p0 + jnp.arange(t)                              # [T] global pos
+    if cfg.rope_style == "mrope":
+        positions = jnp.broadcast_to(gpos[None, None], (3, 1, t))
+    else:
+        positions = gpos[None]
+    q, k_new, v_new = _project_qkv(x, params, cfg, positions)
+    new_valid = jnp.arange(t) < n_new
+    # padded writes clamp to the scratch block (block 0): shape-static
+    # scatter, garbage never lands in live blocks
+    blk = jnp.where(new_valid, table_row[jnp.clip(gpos // bs, 0, w - 1)], 0)
+    off = jnp.where(new_valid, gpos % bs, 0)
+    k_store = cache["k"].at[blk, off].set(k_new[0].astype(cache["k"].dtype))
+    v_store = cache["v"].at[blk, off].set(v_new[0].astype(cache["v"].dtype))
+    g = cfg.n_kv_heads
+    k = k_store[table_row].reshape(1, w * bs, g, hd)
+    v = v_store[table_row].reshape(1, w * bs, g, hd)
+    qg = _grouped(q, g)                                    # [1,T,G,R,D]
+    scores = (jnp.einsum("bqgrd,bkgd->bgrqk", qg, k).astype(jnp.float32)
+              / math.sqrt(hd))
+    # causal over global positions; keys beyond the written region are
+    # excluded by the same bound
+    valid = jnp.arange(w * bs)[None] <= gpos[:, None]      # [T, L]
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", probs, v)
+    out = out.reshape(1, t, cfg.n_heads * hd) @ params["wo"]
     return out, {"k": k_store, "v": v_store}
 
 

@@ -341,11 +341,14 @@ class DecoderLM:
             proto)
         return {"layers": stacked}
 
-    def decode_step_paged(self, params, cache, token, block_table, pos):
+    def decode_step_paged(self, params, cache, token, block_table, pos, *,
+                          kernel: bool = False):
         """Paged counterpart of ``decode_step``: token [B] int32;
         block_table [B, W] int32; pos [B] int32 *per-slot* positions
         (recycled slots restart at 0 — no shared tick). Returns
-        (logits [B, V], cache)."""
+        (logits [B, V], cache). ``kernel=True`` runs every site's
+        gather+attention through the grouped paged Pallas kernel (one
+        launch per site for all slots) instead of the XLA gather path."""
         cfg = self.cfg
         if cfg.block_pattern != "attn":
             raise NotImplementedError(
@@ -361,7 +364,8 @@ class DecoderLM:
                 bp = up[f"block{i}"]
                 h = layers.rms_norm(xc, bp["norm1"], cfg.norm_eps)
                 att, kv = attention.paged_decode_attention(
-                    h, bp["attn"], cfg, uc[f"block{i}"], block_table, pos)
+                    h, bp["attn"], cfg, uc[f"block{i}"], block_table, pos,
+                    use_kernel=kernel)
                 xc = xc + att
                 new_c[f"block{i}"] = kv
                 h = layers.rms_norm(xc, bp["norm2"], cfg.norm_eps)
@@ -376,6 +380,47 @@ class DecoderLM:
         x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
         logits = self._logits(params, x)
         return logits[:, 0], {"layers": new_cache}
+
+    def prefill_paged(self, params, cache, tokens, table_row, p0, n_new):
+        """Admit a prompt by writing whole KV blocks in one shot.
+
+        tokens: [T] int32 — the uncached prompt tokens (padded to a
+        block-size multiple; entries past ``n_new`` are don't-cares) for
+        one slot, occupying global positions ``p0 .. p0+n_new-1``;
+        table_row: [W] the slot's physical block ids. Returns the updated
+        cache pytree only — no logits: prefill covers the prompt up to
+        (not including) its final token, so the ordinary decode tick that
+        feeds the last prompt token and samples the first output is
+        unchanged. One call replaces ``n_new`` replayed decode ticks."""
+        cfg = self.cfg
+        if cfg.block_pattern != "attn":
+            raise NotImplementedError(
+                f"paged prefill requires block_pattern='attn', "
+                f"got {cfg.block_pattern!r}")
+        x = layers.embed(tokens[None], params["embed"])     # [1, T, D]
+        n = max(cfg.moe_interleave, 1) if cfg.n_experts else 1
+
+        def unit(xc, scanned):
+            up, uc = scanned
+            new_c = {}
+            for i in range(n):
+                bp = up[f"block{i}"]
+                h = layers.rms_norm(xc, bp["norm1"], cfg.norm_eps)
+                att, kv = attention.paged_prefill_attention(
+                    h, bp["attn"], cfg, uc[f"block{i}"], table_row, p0,
+                    n_new)
+                xc = xc + att
+                new_c[f"block{i}"] = kv
+                h = layers.rms_norm(xc, bp["norm2"], cfg.norm_eps)
+                if "moe" in bp:
+                    xc = xc + moe.moe_block(h, bp["moe"], cfg)
+                else:
+                    xc = xc + layers.mlp(h, bp["mlp"])
+            return xc, new_c
+
+        _, new_cache = jax.lax.scan(unit, x,
+                                    (params["layers"], cache["layers"]))
+        return {"layers": new_cache}
 
     def decode_step(self, params, cache, token, pos):
         """token: [B] int32 (or [B,1,D] embeds for stub archs);

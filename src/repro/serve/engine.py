@@ -66,7 +66,9 @@ class ServeEngine:
                  backend: str = "jit", pim_tech: str = "proposed",
                  partitions: int = 1, microbatches: int = 8,
                  paged: bool = False, kv_blocks: int | None = None,
-                 kv_block_size: int = 16):
+                 kv_block_size: int = 16, prefill: str = "replay",
+                 attn_kernel: bool = False,
+                 pim_compile: dict | None = None):
         """``backend="jit"`` jits the decode step; ``backend="pim"`` maps
         it onto the PIM hierarchy and decodes through the compiled
         schedule (``repro.mapper.compile``) — placed matmuls run as
@@ -87,7 +89,22 @@ class ServeEngine:
         program: same equations, same order). ``microbatches`` sets the
         streaming depth of the modeled microbatch timeline exposed as
         ``self.pipeline_timeline`` (steady-state decode throughput of the
-        partitioned plan — ``Schedule.pipeline``)."""
+        partitioned plan — ``Schedule.pipeline``).
+
+        ``prefill="batch"`` (paged only) admits a prompt by writing whole
+        KV blocks in one shot (``DecoderLM.prefill_paged``) instead of
+        replaying it token by token through the decode step — one call
+        per admission rather than one tick per prompt token; the decode
+        tick that feeds the final prompt token (and samples the first
+        output) is unchanged. ``attn_kernel=True`` (paged only) runs
+        every decode site's KV gather + attention through the grouped
+        paged Pallas kernel — one launch covering all slots, blocks
+        streamed via the scalar-prefetched block table.
+
+        ``pim_compile`` forwards knobs to the schedule compiler (e.g.
+        ``{"group": False, "fuse": False}`` for the legacy
+        one-launch-per-block program — grouped launches model the
+        hardware but serialize under CPU interpret emulation)."""
         self.cfg = cfg
         self.model: DecoderLM = build_model(cfg)
         self.params = params
@@ -107,6 +124,21 @@ class ServeEngine:
         if partitions > 1 and backend != "pim":
             raise ValueError("partitions require backend='pim' (the jit "
                              "backend has no partitioned plan)")
+        if prefill not in ("replay", "batch"):
+            raise ValueError(f"prefill must be 'replay' or 'batch', "
+                             f"got {prefill!r}")
+        if prefill == "batch" and not paged:
+            raise ValueError("prefill='batch' requires paged=True (the "
+                             "contiguous lanes have no block writes)")
+        if attn_kernel and not paged:
+            raise ValueError("attn_kernel=True requires paged=True (it is "
+                             "the paged gather path)")
+        if pim_compile and backend != "pim":
+            raise ValueError("pim_compile only applies to backend='pim'")
+        self.prefill = prefill
+        self.attn_kernel = attn_kernel
+        self.prefill_batched_tokens = 0
+        self._pim_compile = dict(pim_compile or {})
 
         if paged:
             self.block_size = kv_block_size
@@ -145,6 +177,12 @@ class ServeEngine:
         else:
             raise ValueError(f"backend must be 'jit' or 'pim', "
                              f"got {backend!r}")
+        # whole-block prompt admission (prefill='batch'): one jitted call
+        # per admitted prompt, retraced only per padded-length bucket.
+        # Shared by both backends — decode ticks still run through the
+        # backend's own program, so pim-vs-jit token parity is preserved.
+        self._prefill_fn = (jax.jit(self.model.prefill_paged)
+                            if paged and prefill == "batch" else None)
         self.completed: list[Request] = []
         self.starved: list[int] = []        # rids pending at last run() exit
         # per-slot decode state (persistent so tick_once can be driven
@@ -194,11 +232,11 @@ class ServeEngine:
         # pin the engine (params, KV cache) in the global cache
         if partitions > 1:
             self.pim_program = mapper.compile_partitioned(
-                sched, use_cache=False)
+                sched, use_cache=False, **self._pim_compile)
             self.pipeline_timeline = sched.pipeline(microbatches)
         else:
-            self.pim_program = mapper.compile_schedule(sched,
-                                                       use_cache=False)
+            self.pim_program = mapper.compile_schedule(
+                sched, use_cache=False, **self._pim_compile)
         self._decode = self.pim_program
 
     # one batched decode tick
@@ -210,7 +248,8 @@ class ServeEngine:
 
     def _decode_impl_paged(self, params, cache, tokens, block_table, pos):
         return self.model.decode_step_paged(params, cache, tokens,
-                                            block_table, pos)
+                                            block_table, pos,
+                                            kernel=self.attn_kernel)
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
@@ -251,6 +290,41 @@ class ServeEngine:
                     self._pos[s] = shared
                     self._prompt_idx[s] = shared   # skip cached prefix
                     self.prefix_skipped_tokens += shared
+                    if self.prefill == "batch":
+                        self._prefill_slot(s, req, shared)
+
+    def _prefill_slot(self, s: int, req: Request, p0: int) -> None:
+        """Write the slot's uncached prompt KV (all but the final prompt
+        token) into its blocks in one shot. Replaces ``n_new`` replayed
+        decode ticks with a single jitted call; the subsequent decode
+        tick feeds the final prompt token exactly as the replay path
+        would."""
+        n_new = len(req.prompt) - 1 - p0
+        if n_new < 1:
+            return
+        bs = self.block_size
+        # p0 is block-aligned (admission attaches whole cached blocks),
+        # so one ensure/note_filled per covered block suffices
+        for pos in range(p0, p0 + n_new, bs):   # allocate covering blocks
+            self.cache = self.kv.ensure(self.cache, s, pos)
+        t_pad = -(-n_new // bs) * bs            # bucket: bounded retraces
+        toks = np.zeros(t_pad, np.int32)
+        toks[:n_new] = req.prompt[p0:p0 + n_new]
+        self.cache = self._prefill_fn(
+            self.params, self.cache, jnp.asarray(toks),
+            self.kv.device_table()[s], jnp.int32(p0), jnp.int32(n_new))
+        for pos in range(p0 + bs - 1, p0 + n_new, bs):
+            self.kv.note_filled(s, pos)         # register full prompt blocks
+        self._pos[s] = p0 + n_new
+        self._prompt_idx[s] = len(req.prompt) - 1
+        self.prefill_batched_tokens += n_new
+        self.kv_bytes_written += n_new * self._tok_bytes
+        # block-granular reads, closed form: sum over the n_new written
+        # positions of ceil((p0+i+1)/bs)*bs — p0 is block-aligned, so the
+        # per-position ceil term is p0 + ceil(t/bs)*bs for t = 1..n_new
+        full, rem = divmod(n_new, bs)
+        ceil_sum = bs * (full * (full + 1) // 2) + rem * (full + 1)
+        self.kv_bytes_read += (n_new * p0 + bs * ceil_sum) * self._tok_bytes
 
     def _recycle(self, s: int) -> None:
         """Free the slot and explicitly reset all of its decode state."""

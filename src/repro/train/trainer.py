@@ -48,7 +48,8 @@ class Trainer:
                  jit_kwargs: dict | None = None,
                  backend: str = "jit", pim_tech: str = "proposed",
                  microbatches: int = 1, partitions: int = 1,
-                 loss_fn: Callable | None = None, optimizer=None):
+                 loss_fn: Callable | None = None, optimizer=None,
+                 pim_compile: dict | None = None):
         """``train_step(params, opt_state, batch) -> (params, opt, loss)``;
         ``init_state()`` builds fresh (params, opt_state);
         ``batch_fn(step)`` is the stateless data pipeline.
@@ -71,7 +72,12 @@ class Trainer:
         ``optimizer`` with ``update(grads, opt_state, params)`` (the
         opaque ``train_step`` cannot be split); losses match the jit
         backend to fp32 tolerance because a mean over equal microbatch
-        means is the full-batch mean."""
+        means is the full-batch mean.
+
+        ``pim_compile`` forwards knobs to the schedule compiler (e.g.
+        ``{"group": False, "fuse": False}`` for the legacy
+        one-launch-per-block program — grouped launches model the
+        hardware but serialize under CPU interpret emulation)."""
         self.cfg = cfg
         self.batch_fn = batch_fn
         self.backend = backend
@@ -95,6 +101,9 @@ class Trainer:
             raise ValueError(
                 "jit_kwargs only apply to backend='jit'; the pim "
                 "backend jits the compiled schedule itself")
+        if backend == "jit" and pim_compile:
+            raise ValueError("pim_compile only applies to backend='pim'")
+        self._pim_compile = dict(pim_compile or {})
         if backend == "jit":
             self._step_fn = jax.jit(train_step, **(jit_kwargs or {}))
         elif backend == "pim" and not pipelined:
@@ -104,8 +113,8 @@ class Trainer:
             # use_cache=False: the global program cache keys on fn
             # identity, and this per-instance train_step closure would
             # never hit but would be pinned (params and all) forever
-            self.pim_program = mapper.compile_schedule(sched,
-                                                       use_cache=False)
+            self.pim_program = mapper.compile_schedule(
+                sched, use_cache=False, **self._pim_compile)
             self._step_fn = self.pim_program
         elif backend == "pim":
             self._step_fn = self._build_pipelined_step(
@@ -165,7 +174,8 @@ class Trainer:
             tech=pim_tech, partitions=self.partitions)
         # use_cache=False for the same pinning reason as the whole-step
         # path: per-instance params would live in the global cache forever
-        prog = mapper.compile_partitioned(sched, use_cache=False)
+        prog = mapper.compile_partitioned(sched, use_cache=False,
+                                          **self._pim_compile)
         self.pim_program = prog
         loss_ref = prog.out_refs[0]
         n_param_leaves = len(jax.tree.leaves(params))

@@ -43,11 +43,13 @@ def test_compiled_lenet_matches_interpreter_and_jit():
     params, imgs = _lenet_args()
     worst = prog.verify(params, imgs)       # interpreter + jit oracles
     assert worst < 1e-4
-    # placed kernel calls were baked into the traced program
+    # placed kernel work was baked into the traced program; grouped
+    # execution dispatches far fewer launches than blocks + eltwise
     placed_blocks = sum(p.blocks_per_replica
                        for p in sched.placement.node_placements.values())
-    assert prog.placed_calls == placed_blocks
+    assert prog.placed_blocks == placed_blocks
     assert prog.eltwise_calls > 0
+    assert prog.kernel_launches < placed_blocks + prog.eltwise_calls
 
 
 def test_compiled_llama_decode_matches_interpreter_and_jit():
@@ -70,7 +72,9 @@ def test_compiled_llama_decode_matches_interpreter_and_jit():
     interp = mapper.ScheduleExecutor(sched).run(params, cache, tok, pos)
     _tree_close(got, want)
     _tree_close(got, interp)
-    assert prog.placed_calls > 0            # decode routed through the PIM
+    assert prog.placed_blocks > 0           # decode routed through the PIM
+    # grouped: the lm-head's block grid rides one launch, not one each
+    assert prog.kernel_launches < prog.placed_blocks
 
 
 # ---------------------------------------------------------------------------
@@ -188,7 +192,7 @@ def test_trainer_pim_backend_trains_lenet(tmp_path):
     res = tr.run()
     assert tr.pim_program is not None
     assert tr.pim_program.trace_count == 1       # 10 steps, one trace
-    assert tr.pim_program.placed_calls > 0
+    assert tr.pim_program.placed_blocks > 0
     assert res["losses"][0] > res["losses"][-1]  # it learns
     # the pim step IS the jit step, through the placement
     res_jit = make("jit", "jit").run()
@@ -215,5 +219,5 @@ def test_serve_engine_pim_backend_matches_jit():
     eng_jit, out_jit = drive("jit")
     eng_pim, out_pim = drive("pim")
     assert out_jit == out_pim
-    assert eng_pim.pim_program.placed_calls > 0
+    assert eng_pim.pim_program.placed_blocks > 0
     assert eng_pim.pim_program.trace_count == 1  # whole run, one trace

@@ -1,0 +1,276 @@
+"""Grouped block-batched PIM kernels (ISSUE 5 acceptance contract).
+
+The compiled path must execute every placed node's block grid in ONE
+``pim_matmul_grouped`` launch (and coalesce independent same-shape
+placed equations across equation boundaries), while staying
+*bit-identical* to the per-block interpreter oracle on the forward pass
+and gradient-exact to ``jax.grad(fn)`` within fp32 tolerance. Launch
+counts are part of the contract: the llama3-8b smoke placement must
+dispatch >= 8x fewer placed-matmul pallas calls than the per-block
+baseline.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs, mapper
+from repro.kernels.pim_mac import (pim_mac, pim_mac_grouped, pim_matmul,
+                                   pim_matmul_grouped)
+from repro.models.transformer import build_model
+
+
+# ---------------------------------------------------------------------------
+# kernel layer: grouped == stacked per-block, bit for bit
+# ---------------------------------------------------------------------------
+
+
+def test_grouped_matmul_matches_per_block_stack_exactly():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    a = jax.random.normal(k1, (5, 256, 384), jnp.float32)
+    b = jax.random.normal(k2, (5, 384, 128), jnp.float32)
+    got = pim_matmul_grouped(a, b)
+    for g in range(5):
+        want = pim_matmul(a[g], b[g])
+        np.testing.assert_array_equal(np.asarray(got[g]), np.asarray(want))
+
+
+def test_grouped_matmul_shared_a_mode():
+    # col_groups: one A slab fans out to its column groups through the
+    # index map — no materialized replication, same values
+    k1, k2 = jax.random.split(jax.random.PRNGKey(5))
+    a = jax.random.normal(k1, (2, 128, 256), jnp.float32)
+    b = jax.random.normal(k2, (6, 256, 128), jnp.float32)
+    got = pim_matmul_grouped(a, b, col_groups=3)
+    for g in range(6):
+        want = pim_matmul(a[g // 3], b[g])
+        np.testing.assert_array_equal(np.asarray(got[g]), np.asarray(want))
+    # dA segment-sums the col groups' cotangents
+    def loss(a, b):
+        return jnp.sum(pim_matmul_grouped(a, b, col_groups=3) ** 2)
+
+    def loss_ref(a, b):
+        return jnp.sum(jnp.einsum("gmk,gkn->gmn", a[jnp.arange(6) // 3],
+                                  b) ** 2)
+
+    da, db = jax.grad(loss, argnums=(0, 1))(a, b)
+    da_r, db_r = jax.grad(loss_ref, argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(np.asarray(da), np.asarray(da_r),
+                               rtol=1e-4, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(db), np.asarray(db_r),
+                               rtol=1e-4, atol=1e-2)
+
+
+def test_grouped_matmul_grad_matches_reference():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    a = jax.random.normal(k1, (3, 128, 256), jnp.float32)
+    b = jax.random.normal(k2, (3, 256, 128), jnp.float32)
+
+    def loss_g(a, b):
+        return jnp.sum(pim_matmul_grouped(a, b) ** 2)
+
+    def loss_ref(a, b):
+        return jnp.sum(jnp.einsum("gmk,gkn->gmn", a, b) ** 2)
+
+    da_g, db_g = jax.grad(loss_g, argnums=(0, 1))(a, b)
+    da_r, db_r = jax.grad(loss_ref, argnums=(0, 1))(a, b)
+    # grads are O(1e2); atol absorbs near-zero elements' reassociation
+    np.testing.assert_allclose(np.asarray(da_g), np.asarray(da_r),
+                               rtol=1e-4, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(db_g), np.asarray(db_r),
+                               rtol=1e-4, atol=1e-2)
+
+
+def test_pim_mac_grouped_ragged_matches_individual():
+    keys = jax.random.split(jax.random.PRNGKey(2), 9)
+    shapes = [(37,), (8, 129), (1000,)]
+    triples = []
+    for i, shp in enumerate(shapes):
+        triples.append(tuple(jax.random.normal(keys[3 * i + j], shp,
+                                               jnp.float32)
+                             for j in range(3)))
+    outs = pim_mac_grouped(triples)
+    for (a, b, acc), got in zip(triples, outs):
+        want = pim_mac(a, b, acc)
+        assert got.shape == a.shape
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# lowering layer: grouped forward == per-block oracle, bit for bit,
+# including ragged block grids (last block smaller than the subarray)
+# ---------------------------------------------------------------------------
+
+
+def _ragged_mlp_schedule():
+    # w1 k=2000 -> 3 row blocks (last 158 rows); n=40 -> 2 col blocks
+    # (last 8 cols): ragged in both grid dimensions
+    def mlp(w1, w2, x):
+        return jnp.tanh(x @ w1) @ w2
+
+    k = jax.random.PRNGKey(0)
+    w1 = jax.random.normal(k, (2000, 40)) * 0.02
+    w2 = jax.random.normal(k, (40, 24)) * 0.1
+    x = jax.random.normal(k, (8, 2000))
+    sched = mapper.build_schedule(mlp, w1, w2, x)
+    return sched, mlp, (w1, w2, x)
+
+
+def test_grouped_lowering_bitexact_vs_per_block_oracle_ragged():
+    sched, _, args = _ragged_mlp_schedule()
+    np1 = sched.placement.node_placements[sched.graph.matmul_like()[0].idx]
+    assert np1.row_blocks == 3 and np1.col_blocks == 2  # ragged both ways
+    prog = mapper.compile_schedule(sched, use_cache=False)
+    oracle = mapper.ScheduleExecutor(sched)
+    want = oracle.run(*args)
+    # evaluate the grouped walk eagerly: same lowering, no XLA-level
+    # jit rescheduling in the way — must be bit-identical to the oracle
+    got = prog.fn(*args)
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    # launch accounting after exactly one run each: 2 placed nodes -> 2
+    # grouped launches for the 7 placed blocks (w1 3x2, w2 1x1)
+    assert prog.placed_blocks == oracle.placed_blocks == 3 * 2 + 1
+    assert prog.matmul_launches == 2
+    assert oracle.matmul_launches == 7
+    # the jitted program stays within fp32 tolerance of jax.jit(fn)
+    assert prog.verify(*args) < 1e-4
+
+
+def test_grouped_grad_matches_reference_and_oracle():
+    sched, mlp, args = _ragged_mlp_schedule()
+
+    def loss(fn):
+        return lambda *a: jnp.sum(fn(*a) ** 2)
+
+    prog = mapper.compile_schedule(sched, use_cache=False)
+    got = jax.grad(loss(prog.fn), argnums=(0, 1, 2))(*args)
+    want = jax.grad(loss(mlp), argnums=(0, 1, 2))(*args)
+    oracle = mapper.ScheduleExecutor(sched)
+    want_orc = jax.grad(loss(oracle.run), argnums=(0, 1, 2))(*args)
+    for g, w, wo in zip(jax.tree.leaves(got), jax.tree.leaves(want),
+                        jax.tree.leaves(want_orc)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(wo),
+                                   rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# cross-equation fusion
+# ---------------------------------------------------------------------------
+
+
+def test_independent_same_shape_matmuls_fuse_into_one_launch():
+    # q/k/v-projection shape: three independent placed matmuls sharing
+    # operand shapes -> one grouped launch for all of them
+    def qkv(x, wq, wk, wv):
+        return (x @ wq) + (x @ wk) * (x @ wv)
+
+    k = jax.random.split(jax.random.PRNGKey(3), 4)
+    x = jax.random.normal(k[0], (16, 48))
+    ws = [jax.random.normal(k[i], (48, 48)) * 0.1 for i in (1, 2, 3)]
+    sched = mapper.build_schedule(qkv, x, *ws)
+    blocks_per_node = sched.placement.node_placements[
+        sched.graph.matmul_like()[0].idx].blocks_per_replica
+    prog = mapper.compile_schedule(sched, use_cache=False)
+    got = prog.fn(x, *ws)
+    oracle = mapper.ScheduleExecutor(sched)
+    want = oracle.run(x, *ws)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert prog.placed_blocks == 3 * blocks_per_node
+    assert prog.matmul_launches == 1                  # fused
+    assert oracle.matmul_launches == 3 * blocks_per_node
+    # unfused grouped program: one launch per node
+    nofuse = mapper.compile_schedule(sched, fuse=False, use_cache=False)
+    nofuse.fn(x, *ws)
+    assert nofuse.matmul_launches == 3
+
+
+def test_ready_eltwise_wave_fuses_into_one_launch():
+    # optimizer-update shape: independent per-leaf eltwise chains; each
+    # *wave* of ready ops (one per leaf) fuses into one ragged launch
+    def upd(params, grads):
+        return jax.tree.map(lambda p, g: p - 0.1 * g, params, grads)
+
+    k = jax.random.split(jax.random.PRNGKey(4), 4)
+    params = {"a": jax.random.normal(k[0], (37,)),
+              "b": jax.random.normal(k[1], (8, 9)),
+              "c": jax.random.normal(k[2], (130,))}
+    grads = jax.tree.map(lambda p: p * 0.5, params)
+    sched = mapper.build_schedule(upd, params, grads)
+    prog = mapper.compile_schedule(sched, use_cache=False)
+    got = prog.fn(params, grads)
+    oracle = mapper.ScheduleExecutor(sched)
+    want = oracle.run(params, grads)
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    assert prog.eltwise_calls == oracle.eltwise_calls == 6  # 2 ops x 3 leaves
+    assert oracle.eltwise_launches == 6
+    assert prog.eltwise_launches == 2                 # one launch per wave
+
+
+# ---------------------------------------------------------------------------
+# launch-count acceptance: lenet5 + llama3-8b smoke placements
+# ---------------------------------------------------------------------------
+
+
+def test_lenet_launch_counts():
+    sched = mapper.map_lenet("serve", batch=4)
+    placed_blocks = sum(p.blocks_per_replica
+                        for p in sched.placement.node_placements.values())
+    n_placed_nodes = len(sched.graph.matmul_like())
+    prog = mapper.compile_schedule(sched, use_cache=False)
+    from repro.configs.lenet5 import CONFIG
+    from repro.models import lenet
+    params = lenet.init_lenet(jax.random.PRNGKey(0), CONFIG)
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (4, 28, 28, 1))
+    prog.fn(params, imgs)
+    assert prog.placed_blocks == placed_blocks
+    # one grouped launch per placed node at most (fusion may do better)
+    assert prog.matmul_launches <= n_placed_nodes
+    assert prog.kernel_launches < placed_blocks + prog.eltwise_calls
+
+
+def test_llama_smoke_decode_8x_fewer_matmul_launches():
+    cfg = configs.get_smoke_config("llama3-8b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cache = model.init_cache(2, 16)
+    tok = jnp.array([3, 5], jnp.int32)
+
+    def decode(params, cache, tok, pos):
+        return model.decode_step(params, cache, tok, pos)
+
+    sched = mapper.build_schedule(decode, mapper.abstract_like(params),
+                                  mapper.abstract_like(cache),
+                                  mapper.abstract_like(tok),
+                                  jax.ShapeDtypeStruct((), jnp.int32))
+    baseline = mapper.compile_schedule(sched, group=False, fuse=False,
+                                       use_cache=False)
+    grouped = mapper.compile_schedule(sched, use_cache=False)
+    args = (params, cache, tok, jnp.int32(0))
+    want = baseline(*args)
+    got = grouped(*args)
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-6)
+    assert baseline.matmul_launches == baseline.placed_blocks
+    ratio = baseline.matmul_launches / grouped.matmul_launches
+    assert ratio >= 8, (
+        f"llama3-8b smoke decode: {baseline.matmul_launches} per-block "
+        f"matmul launches -> {grouped.matmul_launches} grouped "
+        f"({ratio:.1f}x < 8x acceptance bar)")
+    assert grouped.kernel_launches < baseline.kernel_launches
+
+
+def test_program_cache_keys_on_group_and_fuse():
+    mapper.clear_program_cache()
+    sched = mapper.map_lenet("serve", batch=4)
+    a = mapper.compile_schedule(sched)
+    b = mapper.compile_schedule(sched, group=False, fuse=False)
+    c = mapper.compile_schedule(sched)
+    assert a is not b
+    assert a is c
+    mapper.clear_program_cache()

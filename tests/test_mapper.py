@@ -233,10 +233,12 @@ def test_executor_matches_jit_lenet_forward():
     params, imgs = _lenet_args()
     ex.verify(params, imgs, rtol=1e-4, atol=1e-4)
     # the PIM kernel paths actually ran: one pim_matmul per placed block
+    # (the executor is the per-block oracle: launches == work)
     placed_blocks = sum(p.blocks_per_replica
                         for p in sched.placement.node_placements.values())
-    assert ex.placed_calls == placed_blocks
+    assert ex.placed_blocks == placed_blocks
     assert ex.eltwise_calls > 0
+    assert ex.kernel_launches == placed_blocks + ex.eltwise_calls
 
 
 def test_executor_matches_jit_small_mlp():
@@ -253,7 +255,7 @@ def test_executor_matches_jit_small_mlp():
     np1 = sched.placement.node_placements[
         sched.graph.matmul_like()[0].idx]
     assert np1.row_blocks == 3                     # ceil(2000 / 921)
-    assert ex.placed_calls >= 3 + 2
+    assert ex.placed_blocks >= 3 + 2
 
 
 def test_executor_rejects_wrong_structure():

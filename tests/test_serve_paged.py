@@ -124,6 +124,105 @@ def test_pim_backend_parity_and_kv_priced_schedule(setup):
 
 
 # ---------------------------------------------------------------------------
+# prefill-batch admission + grouped paged attention kernel
+# ---------------------------------------------------------------------------
+
+
+def test_prefill_batch_matches_replay(setup):
+    """prefill='batch' writes a prompt's KV blocks in one shot; every
+    request — including recycled-slot admissions — must stay token-exact
+    vs the replay path, and the allocator must balance identically."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(10)
+    prompts = [rng.integers(0, cfg.vocab_size, 3 + i, dtype=np.int32)
+               for i in range(5)]
+
+    def drive(**kw):
+        eng = ServeEngine(cfg, params, batch=2, max_len=32, paged=True,
+                          kv_block_size=4, **kw)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_tokens=4))
+        return eng, {r.rid: r.out for r in eng.run()}
+
+    _, want = drive()
+    eng, got = drive(prefill="batch")
+    assert got == want
+    assert eng.prefill_batched_tokens > 0
+    assert eng.kv.live_blocks == 0                   # nothing leaked
+    assert (eng.kv.free_blocks + eng.kv.cached_blocks
+            == eng.kv.num_blocks - 1)
+
+
+def test_prefill_batch_registers_prefix_blocks(setup):
+    """Blocks written by batched prefill must enter the prefix index so
+    a second request over the same prompt shares instead of recomputing."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(11)
+    prefix = rng.integers(0, cfg.vocab_size, 12, dtype=np.int32)
+    eng = ServeEngine(cfg, params, batch=1, max_len=32, paged=True,
+                      kv_block_size=4, prefill="batch")
+    outs = []
+    for rid in range(2):
+        eng.submit(Request(rid=rid, prompt=prefix, max_tokens=3))
+        eng.run()
+        outs.append(eng.completed[rid].out)
+    assert outs[0] == outs[1]
+    assert eng.kv.stats["shared_blocks"] > 0
+    assert eng.prefix_skipped_tokens > 0
+    # the second admission skipped the shared prefix AND batched only
+    # the remainder: far fewer batched tokens than two cold prompts
+    assert eng.prefill_batched_tokens < 2 * (len(prefix) - 1)
+
+
+def test_prefill_batch_pim_backend_parity(setup):
+    """Batched prefill composes with backend='pim': decode ticks still go
+    through the compiled placement, tokens equal the jit backend."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(12)
+    prompts = [rng.integers(0, cfg.vocab_size, 5 + i, dtype=np.int32)
+               for i in range(2)]
+
+    def drive(backend):
+        eng = ServeEngine(cfg, params, batch=2, max_len=16, paged=True,
+                          kv_block_size=4, backend=backend,
+                          prefill="batch")
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_tokens=3))
+        return {r.rid: r.out for r in eng.run()}
+
+    assert drive("pim") == drive("jit")
+
+
+def test_attn_kernel_matches_xla_path(setup):
+    """attn_kernel=True routes every decode site through the grouped
+    paged Pallas kernel (one launch for all slots) — token parity with
+    the XLA gather path across admissions and recycled slots."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(0, cfg.vocab_size, 3 + i, dtype=np.int32)
+               for i in range(4)]
+
+    def drive(**kw):
+        eng = ServeEngine(cfg, params, batch=2, max_len=32, paged=True,
+                          kv_block_size=4, **kw)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_tokens=3))
+        return {r.rid: r.out for r in eng.run()}
+
+    assert drive(attn_kernel=True) == drive()
+
+
+def test_prefill_and_kernel_option_validation(setup):
+    cfg, model, params = setup
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(cfg, params, prefill="batch")
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(cfg, params, attn_kernel=True)
+    with pytest.raises(ValueError, match="prefill"):
+        ServeEngine(cfg, params, paged=True, prefill="bogus")
+
+
+# ---------------------------------------------------------------------------
 # allocator: churn, sharing, copy-on-write, OOM
 # ---------------------------------------------------------------------------
 
