@@ -11,9 +11,18 @@ the chat-system-prompt shape paged caches exist for):
   * ``paged_router_2`` — ``Router`` over 2 paged engines with prefix
                          affinity (each engine's prefix warmed first)
 
-Records aggregate generated tokens/s and the per-variant KV bytes moved
+Records aggregate generated tokens/s, the per-variant KV bytes moved
 (contiguous lanes stream their full provisioned length every tick; paged
-reads stop at each slot's allocated blocks) to ``BENCH_serve.json``.
+reads stop at each slot's allocated blocks), and per-request TTFT/TPOT
+p50/p95 from the ``repro.obs`` latency histograms (the metrics registry
+is reset per variant so each variant's percentiles are its own) to
+``BENCH_serve.json``.
+
+After the timed variants, one *separate* traced run of the 2-engine
+paged router (tracing overhead must not touch the gated numbers) exports
+``TRACE_serve.perfetto.json`` (Chrome-trace timeline, validated before
+writing) and ``METRICS_serve.json`` (counters/gauges/histograms dump) —
+the artifacts CI uploads.
 
 Acceptance bar (CI gate): the 2-engine paged router must deliver
 >= 1.3x the contiguous single engine's aggregate throughput — prefix
@@ -37,7 +46,10 @@ BATCH = 4
 BLOCK_SIZE = 8
 THROUGHPUT_BAR = 1.3
 
-_OUT = pathlib.Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+_OUT = _ROOT / "BENCH_serve.json"
+_TRACE_OUT = _ROOT / "TRACE_serve.perfetto.json"
+_METRICS_OUT = _ROOT / "METRICS_serve.json"
 
 
 def _workload(cfg, rng):
@@ -62,7 +74,9 @@ def _measure(target, prompts) -> dict:
     # fresh Request objects per variant: the engine mutates out/done, so
     # sharing them across variants would both end later runs after one
     # token and credit them with earlier variants' output
+    from repro import obs
     from repro.serve import Request
+    obs.metrics().reset()     # scope TTFT/TPOT histograms to this variant
     reqs = [Request(rid=i, prompt=p, max_tokens=GEN_TOKENS)
             for i, p in enumerate(prompts)]
     base_tokens = sum(len(r.out) for r in target.completed)
@@ -73,7 +87,7 @@ def _measure(target, prompts) -> dict:
     done = target.run()
     dt = time.perf_counter() - t0
     tokens = sum(len(r.out) for r in done) - base_tokens
-    return {
+    out = {
         "requests": len(reqs),
         "generated_tokens": tokens,
         "wall_s": dt,
@@ -82,6 +96,12 @@ def _measure(target, prompts) -> dict:
         "kv_bytes_written": target.kv_bytes_written - base_written,
         "prefix_skipped_tokens": getattr(target, "prefix_skipped_tokens", 0),
     }
+    hists = obs.metrics().snapshot()["histograms"]
+    for met, key in (("serve.ttft_s", "ttft"), ("serve.tpot_s", "tpot")):
+        h = hists.get(met)
+        out[f"{key}_p50_s"] = h["p50"] if h else None
+        out[f"{key}_p95_s"] = h["p95"] if h else None
+    return out
 
 
 def run() -> list[str]:
@@ -133,6 +153,15 @@ def run() -> list[str]:
 
     _OUT.write_text(json.dumps(results, indent=2, sort_keys=True) + "\n")
 
+    # separate traced run — after (and outside) every timed measurement,
+    # so span recording and device syncs cannot leak into the gate
+    from repro import obs
+    with obs.scoped() as tr:
+        _measure(paged(2), prompts)
+        obs.metrics().export_json(_METRICS_OUT)
+    tr.export_chrome(_TRACE_OUT)
+    obs.validate_chrome_trace(_TRACE_OUT)   # self-check before upload
+
     gate = results["paged_router_2"]["speedup_vs_contiguous_1"]
     # real CI gate: benchmarks.run exits non-zero on a raise
     assert gate >= THROUGHPUT_BAR, (
@@ -150,7 +179,11 @@ def run() -> list[str]:
         rows.append(f"serve.{tag}.kv_bytes_read,{r['kv_bytes_read']},")
         rows.append(f"serve.{tag}.prefix_skipped_tokens,"
                     f"{r['prefix_skipped_tokens']},")
+        rows.append(f"serve.{tag}.ttft_p50_s,{r['ttft_p50_s']:.4g},")
+        rows.append(f"serve.{tag}.tpot_p50_s,{r['tpot_p50_s']:.4g},")
     rows.append(f"serve.json,{_OUT.name},perf trajectory artifact")
+    rows.append(f"serve.trace,{_TRACE_OUT.name},perfetto timeline artifact")
+    rows.append(f"serve.metrics,{_METRICS_OUT.name},metrics dump artifact")
     return rows
 
 

@@ -1,0 +1,87 @@
+"""Validate the committed BENCH_*.json perf-trajectory artifacts.
+
+Every ``BENCH_*.json`` in the repo root must parse as JSON, and the files
+CI gates on must carry their gate fields with sane values — a benchmark
+refactor that silently drops a gated field would otherwise turn the CI
+gate into a no-op. Run from the repo root (CI does)::
+
+    python scripts/validate_bench.py
+
+Exits non-zero with a per-file report on any violation.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# file stem -> {variant: [required numeric gate fields]}
+GATES = {
+    "BENCH_executor": {
+        "lenet5_forward": ["speedup", "trace_count"],
+        "llama3_8b_decode": ["speedup", "trace_count"],
+    },
+    "BENCH_fusion": {
+        "llama3_8b_decode": ["matmul_launch_reduction"],
+    },
+    "BENCH_pipeline": {
+        "lenet5_train_modeled": ["speedup"],
+    },
+    "BENCH_serve": {
+        "paged_router_2": ["speedup_vs_contiguous_1", "ttft_p50_s",
+                           "ttft_p95_s", "tpot_p50_s", "tpot_p95_s"],
+    },
+}
+
+
+def _check(path: pathlib.Path, errors: list[str]) -> None:
+    try:
+        data = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        errors.append(f"{path.name}: does not parse: {e}")
+        return
+    if not isinstance(data, dict) or not data:
+        errors.append(f"{path.name}: expected a non-empty JSON object")
+        return
+    for variant, fields in GATES.get(path.stem, {}).items():
+        block = data.get(variant)
+        if not isinstance(block, dict):
+            errors.append(f"{path.name}: missing gated variant "
+                          f"{variant!r}")
+            continue
+        for f in fields:
+            v = block.get(f)
+            if not isinstance(v, (int, float)) or isinstance(v, bool) \
+                    or not math.isfinite(v):
+                errors.append(f"{path.name}: {variant}.{f} must be a "
+                              f"finite number, got {v!r}")
+
+
+def main() -> int:
+    bench_files = sorted(ROOT.glob("BENCH_*.json"))
+    errors: list[str] = []
+    if not bench_files:
+        errors.append("no BENCH_*.json files found in repo root")
+    missing = [stem for stem in GATES
+               if not (ROOT / f"{stem}.json").exists()]
+    for stem in missing:
+        errors.append(f"{stem}.json: gated file missing from repo root")
+    for path in bench_files:
+        _check(path, errors)
+    if errors:
+        print("bench artifact validation FAILED:", file=sys.stderr)
+        for e in errors:
+            print(f"  - {e}", file=sys.stderr)
+        return 1
+    gated = sum(len(v) for g in GATES.values() for v in g.values())
+    print(f"ok: {len(bench_files)} BENCH_*.json parse; "
+          f"{gated} gate fields present")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -2,15 +2,16 @@
 reproduced and extended as a production-grade multi-pod JAX framework.
 
 Subpackages: core (the paper), mapper (chip/tile/subarray lowering +
-static schedules), models, configs, kernels (Pallas), parallel, optim,
-data, checkpoint, train, launch. See README.md.
+static schedules), models, configs, kernels (Pallas), obs (tracing /
+metrics / drift), parallel, optim, data, checkpoint, train, launch.
+See README.md.
 """
 
 __version__ = "1.1.0"
 
 _LAZY_SUBPACKAGES = ("checkpoint", "configs", "core", "data", "kernels",
-                     "launch", "mapper", "models", "optim", "parallel",
-                     "serve", "train")
+                     "launch", "mapper", "models", "obs", "optim",
+                     "parallel", "serve", "train")
 
 
 def __getattr__(name: str):

@@ -55,11 +55,13 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import warnings
 from typing import Any, Callable
 
 import jax
 import numpy as np
 
+from repro import obs
 from repro.mapper import placement as placement_mod
 from repro.mapper.lowering import LoweringContext, eval_eqns, eval_placed
 from repro.mapper.schedule import Schedule
@@ -84,7 +86,18 @@ class CompiledProgram:
     trace_count: int = 0
 
     def __call__(self, *args, **kwargs):
-        return self.jitted(*args, **kwargs)
+        tr = obs.tracer()
+        if not tr.enabled:
+            # the hot path: byte-identical to calling self.jitted directly
+            return self.jitted(*args, **kwargs)
+        # compiled programs are one opaque XLA program — the whole call is
+        # one execute-lane span (per-node drift comes from measure_drift's
+        # eager run); sync so dur covers the dispatched work
+        with tr.span("program:call", lane="execute",
+                     launches=self.ctx.kernel_launches):
+            out = self.jitted(*args, **kwargs)
+            jax.block_until_ready(out)
+        return out
 
     @property
     def placed_blocks(self) -> int:
@@ -95,6 +108,9 @@ class CompiledProgram:
     @property
     def placed_calls(self) -> int:
         """Deprecated alias of ``placed_blocks``."""
+        warnings.warn(
+            "CompiledProgram.placed_calls is deprecated; use "
+            "placed_blocks", DeprecationWarning, stacklevel=2)
         return self.ctx.placed_blocks
 
     @property
@@ -201,9 +217,11 @@ def compile_schedule(schedule: Schedule, *, block: int = 128,
         hit = _CACHE.get(key)
         if hit is not None:
             _STATS["hits"] += 1
+            obs.metrics().counter("compile.cache_hits").inc()
             _CACHE.move_to_end(key)
             return hit
         _STATS["misses"] += 1
+        obs.metrics().counter("compile.cache_misses").inc()
 
     ctx = LoweringContext(schedule, block=block, interpret=interpret,
                           group=group, fuse=fuse)
@@ -216,6 +234,21 @@ def compile_schedule(schedule: Schedule, *, block: int = 128,
         flat, tree = jax.tree.flatten((args, kwargs))
         if holder and any(isinstance(x, jax.core.Tracer) for x in flat):
             holder[0].trace_count += 1
+            obs.metrics().counter("compile.traces").inc()
+            tr = obs.tracer()
+            if tr.enabled:
+                # trace-time walk: record it on the compile lane — the
+                # span surrounds the jaxpr replay that bakes the kernels
+                with tr.span("trace:program", lane="compile",
+                             trace=holder[0].trace_count):
+                    if in_tree is not None and tree != in_tree:
+                        raise TypeError(
+                            f"argument structure {tree} != traced "
+                            f"structure {in_tree}")
+                    outs = eval_placed(ctx, closed.jaxpr, closed.consts,
+                                       flat)
+                return (jax.tree.unflatten(out_tree, outs) if out_tree
+                        else outs)
         if in_tree is not None and tree != in_tree:
             raise TypeError(f"argument structure {tree} != traced "
                             f"structure {in_tree}")
@@ -280,7 +313,14 @@ class PartitionedProgram:
     stage_trace_count: int = 0    # per-stage body traces (gpipe driver)
 
     def __call__(self, *args, **kwargs):
-        return self.jitted(*args, **kwargs)
+        tr = obs.tracer()
+        if not tr.enabled:
+            return self.jitted(*args, **kwargs)
+        with tr.span("program:call", lane="execute",
+                     partitions=len(self.stages)):
+            out = self.jitted(*args, **kwargs)
+            jax.block_until_ready(out)
+        return out
 
     @property
     def n_partitions(self) -> int:
@@ -293,6 +333,9 @@ class PartitionedProgram:
     @property
     def placed_calls(self) -> int:
         """Deprecated alias of ``placed_blocks``."""
+        warnings.warn(
+            "PartitionedProgram.placed_calls is deprecated; use "
+            "placed_blocks", DeprecationWarning, stacklevel=2)
         return self.ctx.placed_blocks
 
     @property
@@ -377,9 +420,11 @@ def compile_partitioned(schedule: Schedule, *,
         hit = _CACHE.get(key)
         if hit is not None and isinstance(hit, PartitionedProgram):
             _STATS["hits"] += 1
+            obs.metrics().counter("compile.cache_hits").inc()
             _CACHE.move_to_end(key)
             return hit
         _STATS["misses"] += 1
+        obs.metrics().counter("compile.cache_misses").inc()
 
     ctx = LoweringContext(schedule, block=block, interpret=interpret,
                           group=group, fuse=fuse)

@@ -28,10 +28,12 @@ path actually ran (here launches == blocks + eltwise by construction).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax
 import numpy as np
 
+from repro import obs
 from repro.mapper.lowering import LoweringContext, eval_placed
 from repro.mapper.schedule import Schedule
 
@@ -64,6 +66,9 @@ class ScheduleExecutor:
     @property
     def placed_calls(self) -> int:
         """Deprecated alias of ``placed_blocks``."""
+        warnings.warn(
+            "ScheduleExecutor.placed_calls is deprecated; use "
+            "placed_blocks", DeprecationWarning, stacklevel=2)
         return self._ctx.placed_blocks
 
     @property
@@ -92,7 +97,21 @@ class ScheduleExecutor:
             raise TypeError(
                 f"argument structure {in_tree} != traced structure "
                 f"{self.schedule.graph.in_tree}")
-        outs = eval_placed(self._ctx, closed.jaxpr, closed.consts, flat)
+        tr = obs.tracer()
+        if tr.enabled:
+            # depth-0 run span: drift takes this as measured_total; the
+            # per-node launch spans recorded inside eval_eqns nest under it
+            with tr.span("run:schedule", lane="execute",
+                         group=self.group, fuse=self.fuse):
+                outs = eval_placed(self._ctx, closed.jaxpr, closed.consts,
+                                   flat)
+                jax.block_until_ready(outs)
+        else:
+            outs = eval_placed(self._ctx, closed.jaxpr, closed.consts, flat)
+        m = obs.metrics()
+        m.counter("executor.runs").inc()
+        m.gauge("executor.placed_blocks").set(self._ctx.placed_blocks)
+        m.gauge("executor.kernel_launches").set(self._ctx.kernel_launches)
         out_tree = self.schedule.graph.out_tree
         return jax.tree.unflatten(out_tree, outs) if out_tree else outs
 

@@ -62,11 +62,13 @@ tests in tests/test_compile.py pin the supported surface.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import estimator
 from repro.core.estimator import CALL_PRIMS, inner_jaxpr
 from repro.kernels.pim_mac import (pim_mac, pim_mac_grouped, pim_matmul,
@@ -123,6 +125,9 @@ class LoweringContext:
     @property
     def placed_calls(self) -> int:
         """Deprecated alias of ``placed_blocks``."""
+        warnings.warn(
+            "LoweringContext.placed_calls is deprecated; use "
+            "placed_blocks", DeprecationWarning, stacklevel=2)
         return self.placed_blocks
 
     def subtree_has_placed(self, jaxpr) -> bool:
@@ -467,6 +472,21 @@ _FUSERS = {"matmul": _fuse_matmuls, "eltwise": _fuse_eltwise}
 # ---------------------------------------------------------------------------
 
 
+def _dispatch_placed(ctx: LoweringContext, eqn, node, invals, cands,
+                     cand_idx, env, fused, read, ready):
+    """One placed equation through fusion (when candidates exist) else its
+    per-kind rule. Factored out of :func:`eval_eqns` so the traced and the
+    traced+instrumented paths share the dispatch logic exactly."""
+    outs = None
+    if cands is not None and node.kind in cands:
+        peers = cands[node.kind][cand_idx[id(eqn)] + 1:]
+        outs = _FUSERS[node.kind](ctx, eqn, peers, env, fused,
+                                  read, ready, node, invals)
+    if outs is None:
+        outs = RULES[node.kind](ctx, eqn, node, invals)
+    return outs
+
+
 def eval_eqns(ctx: LoweringContext, eqns, env: dict) -> None:
     """Evaluate an equation run against ``env`` (var -> value), writing
     each equation's outputs back into ``env``. This is the inner loop of
@@ -524,12 +544,28 @@ def eval_eqns(ctx: LoweringContext, eqns, env: dict) -> None:
                 if ctx.subtree_has_placed(inner):
                     outs = eval_placed(ctx, inner, [], invals)
         if outs is None and node is not None:
-            if cands is not None and node.kind in cands:
-                peers = cands[node.kind][cand_idx[id(eqn)] + 1:]
-                outs = _FUSERS[node.kind](ctx, eqn, peers, env, fused,
-                                          read, ready, node, invals)
-            if outs is None:
-                outs = RULES[node.kind](ctx, eqn, node, invals)
+            tr = obs.tracer()
+            if tr.enabled and not any(isinstance(x, jax.core.Tracer)
+                                      for x in invals):
+                # eager dispatch with tracing on: record the launch as an
+                # execute-lane span, synced so dur covers the actual work
+                # (drift joins these against the schedule's stage costs).
+                # Never taken under jit tracing — operands are Tracers —
+                # so compiled programs stay byte-identical.
+                n0 = ctx.matmul_launches + ctx.eltwise_launches
+                with tr.span(f"{node.kind}:{node.name}", lane="execute",
+                             node=node.idx, kind=node.kind):
+                    outs = _dispatch_placed(ctx, eqn, node, invals, cands,
+                                            cand_idx, env, fused, read,
+                                            ready)
+                    if outs is not None:
+                        jax.block_until_ready(outs)
+                if outs is not None:
+                    obs.metrics().counter("pim.kernel_launches").inc(
+                        ctx.matmul_launches + ctx.eltwise_launches - n0)
+            else:
+                outs = _dispatch_placed(ctx, eqn, node, invals, cands,
+                                        cand_idx, env, fused, read, ready)
         if outs is None:
             subfuns, bind_params = eqn.primitive.get_bind_params(eqn.params)
             ans = eqn.primitive.bind(*subfuns, *invals, **bind_params)

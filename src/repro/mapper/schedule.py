@@ -39,6 +39,7 @@ import dataclasses
 import math
 from typing import Callable
 
+from repro import obs
 from repro.core import accelerator as acc_mod
 from repro.core import estimator
 from repro.mapper import graph as graph_mod
@@ -463,6 +464,12 @@ def build_schedule(fn: Callable, *args,
     ``partitions=K`` additionally cuts the graph into K pipeline
     partitions, aligns their placements to tile boundaries, and enables
     :meth:`Schedule.pipeline` / partitioned compilation."""
-    g = graph_mod.build_graph(fn, *args, **kwargs)
-    return build_schedule_from_graph(g, hierarchy=hierarchy, policy=policy,
-                                     tech=tech, partitions=partitions)
+    with obs.span("build:schedule", lane="compile"):
+        g = graph_mod.build_graph(fn, *args, **kwargs)
+        sched = build_schedule_from_graph(g, hierarchy=hierarchy,
+                                          policy=policy, tech=tech,
+                                          partitions=partitions)
+    m = obs.metrics()
+    m.counter("mapper.schedules_built").inc()
+    m.gauge("mapper.last_modeled_latency_s").set(sched.report.latency_s)
+    return sched

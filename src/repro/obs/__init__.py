@@ -1,0 +1,117 @@
+"""Unified PIM observability: tracing, metrics, and drift detection.
+
+Three layers, one switch:
+
+  * **tracing** (``repro.obs.trace``) — structured span events
+    (compile/trace, per-node kernel launches, pipeline fill/steady/drain
+    ticks, serve admit/prefill/decode/evict) exported as
+    Chrome-trace/Perfetto JSON, so a training step or serve run opens as
+    a timeline;
+  * **metrics** (``repro.obs.metrics``) — a process-local registry of
+    counters/gauges/histograms absorbing the stack's ad-hoc counters
+    (placed blocks, kernel launches, KV occupancy, router queue depths)
+    and adding per-request TTFT/TPOT and per-step wall-time histograms;
+  * **drift** (``repro.obs.drift``) — joins measured launch spans
+    against the schedule's *modeled* stage costs and reports per-node
+    modeled-vs-measured ratios.
+
+Cost discipline: tracing is **opt-in** (:func:`enable`) and the stack's
+hot paths guard on ``tracer().enabled`` — when disabled the only cost is
+an attribute check, no span args are built, no device syncs happen, and
+no jit retraces are introduced (instrumentation wraps ``pallas_call``
+dispatch sites and program boundaries, never traced code). The metrics
+registry is always-on but only touched at program boundaries (per step /
+tick / request / compile), where a dict update is noise.
+
+Usage::
+
+    from repro import obs
+
+    tr = obs.enable()                 # fresh Tracer installed globally
+    prog(*args)                       # spans recorded
+    tr.export_chrome("step.trace.json")
+    obs.metrics().snapshot()          # counters/gauges/histograms
+    obs.drift_report(prog.schedule)   # modeled-vs-measured per node
+    obs.disable()
+
+or scoped::
+
+    with obs.scoped() as tr:
+        executor.run(*args)
+    report = obs.drift_report(schedule, tr)
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+from repro.obs.drift import (DriftReport, NodeDrift, drift_report,
+                             measure_drift)
+from repro.obs.metrics import (DEFAULT_EDGES, Counter, Gauge, Histogram,
+                               MetricsRegistry)
+from repro.obs.trace import (NULL_TRACER, NullTracer, SpanEvent, Tracer,
+                             validate_chrome_trace)
+
+_TRACER: Tracer | NullTracer = NULL_TRACER
+_METRICS = MetricsRegistry()
+
+
+def tracer() -> Tracer | NullTracer:
+    """The installed tracer (the shared no-op when disabled)."""
+    return _TRACER
+
+
+def metrics() -> MetricsRegistry:
+    """The process-local metrics registry (always available)."""
+    return _METRICS
+
+
+def is_enabled() -> bool:
+    return _TRACER.enabled
+
+
+def enable(tracer: Tracer | None = None) -> Tracer:
+    """Install (and return) a tracer globally — a fresh one by default."""
+    global _TRACER
+    _TRACER = tracer if tracer is not None else Tracer()
+    return _TRACER
+
+
+def disable() -> None:
+    """Swap the no-op tracer back in (recorded events are dropped with
+    the old tracer unless the caller kept a reference)."""
+    global _TRACER
+    _TRACER = NULL_TRACER
+
+
+@contextlib.contextmanager
+def scoped(tracer: Tracer | None = None):
+    """Enable a (fresh) tracer for the block, restoring the previous
+    tracer — enabled or not — on exit. Yields the scoped tracer."""
+    global _TRACER
+    prev = _TRACER
+    _TRACER = tracer if tracer is not None else Tracer()
+    try:
+        yield _TRACER
+    finally:
+        _TRACER = prev
+
+
+def span(name: str, lane: str = "main", **args):
+    """Module-level convenience: a span on the installed tracer (no-op
+    context when disabled). Hot paths should guard on
+    ``tracer().enabled`` instead, to skip building ``args``."""
+    return _TRACER.span(name, lane=lane, **args)
+
+
+def instant(name: str, lane: str = "main", **args) -> None:
+    _TRACER.instant(name, lane=lane, **args)
+
+
+__all__ = [
+    "Counter", "DEFAULT_EDGES", "DriftReport", "Gauge", "Histogram",
+    "MetricsRegistry", "NULL_TRACER", "NodeDrift", "NullTracer",
+    "SpanEvent", "Tracer", "disable", "drift_report", "enable", "instant",
+    "is_enabled", "measure_drift", "metrics", "scoped", "span", "tracer",
+    "validate_chrome_trace",
+]

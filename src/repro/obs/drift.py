@@ -1,0 +1,174 @@
+"""Modeled-vs-measured drift: join traced spans against schedule costs.
+
+The mapper's :class:`~repro.mapper.schedule.ScheduleReport` *asserts* a
+per-stage cost model (lane-limited compute, double-buffered transfers,
+priced KV traffic). This module closes the loop: run the schedule with
+tracing enabled, join every per-node launch span against the same node's
+modeled stage latency, and report the per-node **drift ratio**
+``measured_s / modeled_s``.
+
+What the ratios mean on this CPU-interpret harness: interpret-mode
+pallas serializes both the block grid the model prices as parallel
+subarray lanes *and* the group axis of grouped launches, so ratios far
+above 1 are expected — the report turns that serialization from a
+footnote into a per-node number, and makes genuinely anomalous nodes
+(ratio out of family) visible. On real hardware the same join measures
+how honest the cost model is.
+
+Join keys: launch spans recorded by ``repro.mapper.lowering.eval_eqns``
+carry ``node=<graph node idx>``; modeled costs come from
+``schedule.stages`` (one stage per node, ``t_stage_s`` the charged
+latency). Under cross-equation fusion a fused peer's time lands on its
+group leader's span — its own measured time reads 0, flagged via
+``NodeDrift.launches == 0``. Attached KV traffic contributes a modeled
+floor with no per-launch measurement (the gather rides inside the decode
+program), reported separately on the :class:`DriftReport`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Any
+
+from repro.obs.trace import Tracer
+
+EXEC_LANE = "execute"
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeDrift:
+    """Modeled vs measured execution time of one placed graph node."""
+
+    node: int
+    name: str
+    kind: str
+    modeled_s: float              # schedule stage t_stage_s (charged)
+    measured_s: float             # sum of this node's launch span durations
+    launches: int                 # spans recorded (0 = fused into a peer)
+    ratio: float                  # measured / modeled (inf if modeled == 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftReport:
+    tech: str
+    nodes: tuple[NodeDrift, ...]
+    modeled_total_s: float        # schedule.report.latency_s (KV included)
+    measured_total_s: float       # outermost run span (fallback: node sum)
+    ratio: float                  # measured_total / modeled_total
+    kv_modeled_s: float = 0.0     # attached KVTraffic.t_s (0 if none)
+
+    @property
+    def n_measured(self) -> int:
+        return sum(1 for n in self.nodes if n.launches)
+
+    def by_ratio(self) -> list[NodeDrift]:
+        """Measured nodes, most-divergent first."""
+        return sorted((n for n in self.nodes if n.launches),
+                      key=lambda n: n.ratio, reverse=True)
+
+    def summary(self, top: int = 5) -> str:
+        lines = [
+            f"[{self.tech}] drift: measured {self.measured_total_s:.3e} s "
+            f"vs modeled {self.modeled_total_s:.3e} s "
+            f"(x{self.ratio:.1f}); {self.n_measured}/{len(self.nodes)} "
+            f"nodes measured"
+            + (f", kv modeled {self.kv_modeled_s:.3e} s"
+               if self.kv_modeled_s else "")]
+        for n in self.by_ratio()[:top]:
+            lines.append(
+                f"  {n.name:<24} {n.kind:<8} modeled {n.modeled_s:.3e} s "
+                f"measured {n.measured_s:.3e} s  x{n.ratio:.1f} "
+                f"({n.launches} launch{'es' if n.launches != 1 else ''})")
+        return "\n".join(lines)
+
+    def to_dict(self) -> dict:
+        return {
+            "tech": self.tech,
+            "modeled_total_s": self.modeled_total_s,
+            "measured_total_s": self.measured_total_s,
+            "ratio": self.ratio,
+            "kv_modeled_s": self.kv_modeled_s,
+            "nodes": [dataclasses.asdict(n) for n in self.nodes],
+        }
+
+    def export_json(self, path) -> str:
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=1)
+        return str(path)
+
+
+def _ratio(measured: float, modeled: float) -> float:
+    if modeled > 0:
+        return measured / modeled
+    return math.inf if measured > 0 else 1.0
+
+
+def drift_report(schedule: Any, tracer: Tracer | None = None) -> DriftReport:
+    """Join ``tracer``'s execute-lane spans against ``schedule``'s modeled
+    stage costs (defaults to the globally enabled tracer).
+
+    The tracer should hold exactly one run of the schedule (e.g. via
+    :func:`measure_drift` or one ``ScheduleExecutor.run`` under
+    ``repro.obs.enable()``); with N runs recorded, measured times are N x
+    the modeled single-run costs and every ratio inflates accordingly.
+    """
+    if tracer is None:
+        from repro import obs
+        tracer = obs.tracer()
+    spans = tracer.spans(lane=EXEC_LANE)
+    if not spans:
+        raise ValueError(
+            "no execute-lane spans recorded — run the schedule with "
+            "observability enabled (repro.obs.enable()) or use "
+            "measure_drift(), and check the run was not traced-only")
+    measured: dict[int, float] = {}
+    launches: dict[int, int] = {}
+    for s in spans:
+        node = s.args.get("node")
+        if node is None:
+            continue
+        measured[node] = measured.get(node, 0.0) + s.dur_s
+        launches[node] = launches.get(node, 0) + 1
+
+    nodes = []
+    for stage in schedule.stages:
+        m = measured.get(stage.node, 0.0)
+        nodes.append(NodeDrift(
+            node=stage.node, name=stage.name, kind=stage.kind,
+            modeled_s=stage.t_stage_s, measured_s=m,
+            launches=launches.get(stage.node, 0),
+            ratio=_ratio(m, stage.t_stage_s)))
+
+    # outermost whole-run span when present (the executor/program wraps
+    # its run at depth 0); else the sum of the node launches
+    runs = [s for s in spans if s.depth == 0 and s.args.get("node") is None]
+    measured_total = (sum(s.dur_s for s in runs) if runs
+                      else sum(measured.values()))
+    modeled_total = schedule.report.latency_s
+    return DriftReport(
+        tech=schedule.report.tech, nodes=tuple(nodes),
+        modeled_total_s=modeled_total, measured_total_s=measured_total,
+        ratio=_ratio(measured_total, modeled_total),
+        kv_modeled_s=schedule.kv.t_s if schedule.kv is not None else 0.0)
+
+
+def measure_drift(schedule: Any, *args, group: bool = False,
+                  fuse: bool = False, interpret: bool = True,
+                  block: int = 128, **kwargs) -> DriftReport:
+    """Run ``schedule`` once through the eager executor under a scoped
+    tracer and return the joined :class:`DriftReport`.
+
+    ``group=False`` (default) measures the per-block oracle — one span
+    per placed node covering its whole launch chain; ``group=True``
+    measures the grouped launches instead, which is where interpret-mode
+    serialization of the group axis shows up as ratio >> 1.
+    """
+    from repro import obs
+    from repro.mapper.executor import ScheduleExecutor
+
+    with obs.scoped() as tr:
+        ScheduleExecutor(schedule, interpret=interpret, block=block,
+                         group=group, fuse=fuse).run(*args, **kwargs)
+    return drift_report(schedule, tr)

@@ -42,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import obs
 from repro.parallel._compat import pcast_varying, shard_map
 
 
@@ -117,6 +118,23 @@ def _resolve(ref, flat_args, stage_outs):
     return ref[1]                              # ("lit", val)
 
 
+def tick_phase(t: int, n_stages: int, n_micro: int) -> str:
+    """GPipe phase of tick ``t``: 'fill' while the first microbatch has
+    not reached the last stage, 'drain' once the last microbatch has been
+    injected, 'steady' between (fill wins the n_micro < n_stages overlap)."""
+    if t < n_stages - 1:
+        return "fill"
+    if t >= n_micro:
+        return "drain"
+    return "steady"
+
+
+def _traceable(vals) -> bool:
+    """True when the cell runs eagerly (no jit tracers among operands) —
+    span durations are only meaningful for real work, never trace time."""
+    return not any(isinstance(x, jax.core.Tracer) for x in vals)
+
+
 def run_partitioned(stages: Sequence, out_refs: Sequence,
                     flat_args_per_mb: Sequence[Sequence]) -> list[list]:
     """Stream M microbatches through the partition stage programs in GPipe
@@ -129,12 +147,20 @@ def run_partitioned(stages: Sequence, out_refs: Sequence,
     output equals the stages composed sequentially on that microbatch.
     """
     n_micro = len(flat_args_per_mb)
-    outs = [[None] * len(stages) for _ in range(n_micro)]
-    for _, s, m in gpipe_grid(len(stages), n_micro):
+    n_stages = len(stages)
+    outs = [[None] * n_stages for _ in range(n_micro)]
+    for t, s, m in gpipe_grid(n_stages, n_micro):
         ins = [_resolve(r, flat_args_per_mb[m], outs[m])
                for r in stages[s].in_refs]
         run = getattr(stages[s], "jitted", None) or stages[s].fn
-        outs[m][s] = run(*ins)
+        tr = obs.tracer()
+        if tr.enabled and _traceable(ins):
+            with tr.span(f"{tick_phase(t, n_stages, n_micro)}:tick",
+                         lane="pipeline", tick=t, stage=s, micro=m):
+                outs[m][s] = run(*ins)
+                jax.block_until_ready(outs[m][s])
+        else:
+            outs[m][s] = run(*ins)
     return [[_resolve(r, flat_args_per_mb[m], outs[m]) for r in out_refs]
             for m in range(n_micro)]
 
@@ -176,10 +202,17 @@ def gpipe_value_and_grad(stages: Sequence, loss_ref: tuple,
     grid = list(gpipe_grid(n_stages, n_micro))
     outs = [[None] * n_stages for _ in range(n_micro)]
     pullbacks = [[None] * n_stages for _ in range(n_micro)]
-    for _, s, m in grid:
+    for t, s, m in grid:
         ins = [_resolve(r, flat_args_per_mb[m], outs[m])
                for r in stages[s].in_refs]
-        outs[m][s], pullbacks[m][s] = jax.vjp(stages[s].fn, *ins)
+        tr = obs.tracer()
+        if tr.enabled and _traceable(ins):
+            with tr.span(f"{tick_phase(t, n_stages, n_micro)}:fwd",
+                         lane="pipeline", tick=t, stage=s, micro=m):
+                outs[m][s], pullbacks[m][s] = jax.vjp(stages[s].fn, *ins)
+                jax.block_until_ready(outs[m][s])
+        else:
+            outs[m][s], pullbacks[m][s] = jax.vjp(stages[s].fn, *ins)
 
     ls, lj = loss_ref[1], loss_ref[2]
     losses = [outs[m][ls][lj] for m in range(n_micro)]
@@ -192,10 +225,17 @@ def gpipe_value_and_grad(stages: Sequence, loss_ref: tuple,
         seed = jnp.ones_like(losses[m]) / n_micro
         out_cots[m][ls][lj] = _acc(out_cots[m][ls][lj], seed)
     grads: dict[int, Any] = {i: None for i in grad_argnums}
-    for _, s, m in reversed(grid):
+    for t, s, m in reversed(grid):
         cots = tuple(c if c is not None else _zero_cot(x)
                      for c, x in zip(out_cots[m][s], outs[m][s]))
-        in_cots = pullbacks[m][s](cots)
+        tr = obs.tracer()
+        if tr.enabled and _traceable(cots):
+            with tr.span(f"{tick_phase(t, n_stages, n_micro)}:bwd",
+                         lane="pipeline", tick=t, stage=s, micro=m):
+                in_cots = pullbacks[m][s](cots)
+                jax.block_until_ready(in_cots)
+        else:
+            in_cots = pullbacks[m][s](cots)
         for ref, c in zip(stages[s].in_refs, in_cots):
             if ref[0] == "stage":
                 _, r, j = ref

@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from collections import deque
 from typing import Callable
 
@@ -45,6 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ArchConfig
 from repro.models.transformer import DecoderLM, build_model
 from repro.serve.kv import PagedKVCache
@@ -58,6 +60,25 @@ class Request:
     eos: int | None = None
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # wall-clock stamps (time.monotonic): submit / first generated token /
+    # completion — the raw material of the TTFT/TPOT histograms
+    t_submit: float | None = None
+    t_first: float | None = None
+    t_done: float | None = None
+
+    @property
+    def ttft_s(self) -> float | None:
+        """Time to first token (None until one is generated)."""
+        if self.t_submit is None or self.t_first is None:
+            return None
+        return self.t_first - self.t_submit
+
+    @property
+    def tpot_s(self) -> float | None:
+        """Mean time per output token after the first (needs >= 2)."""
+        if self.t_first is None or self.t_done is None or len(self.out) < 2:
+            return None
+        return (self.t_done - self.t_first) / (len(self.out) - 1)
 
 
 class ServeEngine:
@@ -252,6 +273,9 @@ class ServeEngine:
                                             kernel=self.attn_kernel)
 
     def submit(self, req: Request) -> None:
+        if req.t_submit is None:      # router stamps before delegating
+            req.t_submit = time.monotonic()
+        obs.metrics().counter("serve.submitted").inc()
         self.queue.append(req)
 
     def prefix_lookup(self, prompt) -> int:
@@ -280,6 +304,10 @@ class ServeEngine:
             if self.slots[s] is None and self.queue:
                 req = self.queue.popleft()
                 self.slots[s] = req
+                obs.metrics().counter("serve.admitted").inc()
+                tr = obs.tracer()
+                if tr.enabled:
+                    tr.instant("admit", lane="serve", rid=req.rid, slot=s)
                 # explicit per-slot state reset on (re)admission — a
                 # recycled slot must never rely on the prompt phase
                 # masking the previous occupant's sample/cursor
@@ -302,6 +330,13 @@ class ServeEngine:
         n_new = len(req.prompt) - 1 - p0
         if n_new < 1:
             return
+        with obs.span("prefill:batch", lane="serve", rid=req.rid, slot=s,
+                      tokens=n_new):
+            self._prefill_slot_inner(s, req, p0, n_new)
+        obs.metrics().counter("serve.prefill_tokens").inc(n_new)
+
+    def _prefill_slot_inner(self, s: int, req: Request, p0: int,
+                            n_new: int) -> None:
         bs = self.block_size
         # p0 is block-aligned (admission attaches whole cached blocks),
         # so one ensure/note_filled per covered block suffices
@@ -362,10 +397,12 @@ class ServeEngine:
         if self.paged:
             for s in active:
                 self.cache = self.kv.ensure(self.cache, s, int(self._pos[s]))
-            logits, self.cache = self._decode(
-                self.params, self.cache, jnp.asarray(feed),
-                self.kv.device_table(), jnp.asarray(self._pos))
-            nxt = np.asarray(self.sample(logits), np.int32)
+            with obs.span("decode:tick", lane="serve", tick=self._tick,
+                          active=len(active)):
+                logits, self.cache = self._decode(
+                    self.params, self.cache, jnp.asarray(feed),
+                    self.kv.device_table(), jnp.asarray(self._pos))
+                nxt = np.asarray(self.sample(logits), np.int32)
             bs = self.block_size
             for s in active:
                 self.kv.note_filled(s, int(self._pos[s]))
@@ -375,7 +412,9 @@ class ServeEngine:
                                        * bs * self._tok_bytes)
             self.kv_bytes_written += len(active) * self._tok_bytes
         else:
-            nxt = self.step(self._tick, feed)
+            with obs.span("decode:tick", lane="serve", tick=self._tick,
+                          active=len(active)):
+                nxt = self.step(self._tick, feed)
             # contiguous lanes stream their full provisioned length
             self.kv_bytes_read += len(active) * self.max_len \
                 * self._tok_bytes
@@ -388,13 +427,30 @@ class ServeEngine:
                 self._prompt_idx[s] = len(req.prompt)  # gen: feed samples
                 req.out.append(int(nxt[s]))
                 self._last_tok[s] = nxt[s]
+                if req.t_first is None:
+                    req.t_first = time.monotonic()
+                    if req.t_submit is not None:
+                        obs.metrics().histogram("serve.ttft_s").observe(
+                            req.t_first - req.t_submit)
                 hit_eos = req.eos is not None and int(nxt[s]) == req.eos
                 if len(req.out) >= req.max_tokens or hit_eos:
                     req.done = True
+                    req.t_done = time.monotonic()
+                    if req.tpot_s is not None:
+                        obs.metrics().histogram("serve.tpot_s").observe(
+                            req.tpot_s)
+                    obs.metrics().counter("serve.completed").inc()
                     self.completed.append(req)
                     self._recycle(s)
         self._admit()
         self._tick += 1
+        m = obs.metrics()
+        m.counter("serve.ticks").inc()
+        m.gauge("serve.queue_depth").set(len(self.queue))
+        if self.paged:
+            m.gauge("serve.kv_live_blocks").set(self.kv.live_blocks)
+            m.gauge("serve.kv_cached_blocks").set(self.kv.cached_blocks)
+            m.gauge("serve.kv_free_blocks").set(self.kv.free_blocks)
         return True
 
     def run(self, max_ticks: int | None = None, *,
@@ -429,3 +485,13 @@ class ServeEngine:
                 f"(rids {self.starved}); raise max_ticks/max_len or pass "
                 f"on_starvation='return'")
         return self.completed
+
+    def drift_report(self, tracer=None):
+        """Join recorded execute-lane spans against the pim schedule's
+        modeled stage costs (``repro.obs.drift``). Requires
+        ``backend='pim'`` and a run made with observability enabled."""
+        if self.schedule is None:
+            raise ValueError(
+                "drift_report requires backend='pim' (the jit backend "
+                "has no modeled schedule to drift against)")
+        return obs.drift_report(self.schedule, tracer)

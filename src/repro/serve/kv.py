@@ -47,6 +47,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 SCRATCH_BLOCK = 0
 
 
@@ -275,6 +277,10 @@ class PagedKVCache:
             key = self._block_key.pop(bid)
             del self._prefix[key]
             self.stats["evicted_blocks"] += 1
+            obs.metrics().counter("serve.kv_evictions").inc()
+            tr = obs.tracer()
+            if tr.enabled:
+                tr.instant("evict", lane="serve", block=bid)
             return bid
         raise KVCacheOOM(
             f"paged KV pool exhausted: all {self.num_blocks - 1} "

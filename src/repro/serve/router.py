@@ -29,8 +29,10 @@ engine-level scheduler.
 
 from __future__ import annotations
 
+import time
 from typing import Iterable
 
+from repro import obs
 from repro.serve.engine import Request, ServeEngine
 
 
@@ -60,18 +62,25 @@ class Router:
 
     def submit(self, req: Request) -> int:
         """Dispatch one request; returns the chosen engine index."""
+        if req.t_submit is None:      # TTFT clock starts at router entry
+            req.t_submit = time.monotonic()
         hits = [e.prefix_lookup(req.prompt) for e in self.engines]
         best = max(hits)
         if best > 0:
             cands = [i for i, h in enumerate(hits) if h == best]
             idx = min(cands, key=lambda i: self.engines[i].pending_work())
             self.stats["prefix_routed"] += 1
+            obs.metrics().counter("router.prefix_routed").inc()
         else:
             idx = min(range(len(self.engines)),
                       key=lambda i: self.engines[i].pending_work())
             self.stats["depth_routed"] += 1
+            obs.metrics().counter("router.depth_routed").inc()
         self.stats["per_engine"][idx] += 1
         self.engines[idx].submit(req)
+        m = obs.metrics()
+        for i, e in enumerate(self.engines):
+            m.gauge(f"router.queue_depth.engine{i}").set(len(e.queue))
         return idx
 
     def pending_work(self) -> int:

@@ -18,6 +18,8 @@ import dataclasses
 import time
 from typing import Callable
 
+from repro import obs
+
 
 @dataclasses.dataclass
 class StragglerPolicy:
@@ -46,6 +48,11 @@ class StragglerPolicy:
         flagged = dt > self.slow_factor * self._ewma
         if flagged:
             self._events.append((step, dt, self._ewma))
+            obs.metrics().counter("train.straggler_events").inc()
+            tr = obs.tracer()
+            if tr.enabled:
+                tr.instant("straggler", lane="train", step=step, dt_s=dt,
+                           ewma_s=self._ewma)
             if self.on_straggler:
                 self.on_straggler(step, dt, self._ewma)
         # EWMA excludes flagged outliers so one straggle doesn't mask the next
@@ -64,14 +71,26 @@ class HeartbeatMonitor:
 
     def __post_init__(self):
         self._last: dict[str, float] = {}
+        self._reported: set[str] = set()
 
     def beat(self, worker: str) -> None:
         self._last[worker] = self.clock()
+        self._reported.discard(worker)    # recovered: next lapse counts anew
 
     def dead_workers(self) -> list[str]:
         now = self.clock()
-        return [w for w, t in self._last.items()
+        dead = [w for w, t in self._last.items()
                 if now - t > self.timeout_s]
+        # count each lapse once (polling healthy() must not re-count)
+        fresh = [w for w in dead if w not in self._reported]
+        if fresh:
+            self._reported.update(fresh)
+            obs.metrics().counter("train.heartbeat_lapses").inc(len(fresh))
+            tr = obs.tracer()
+            if tr.enabled:
+                for w in fresh:
+                    tr.instant("heartbeat_lapse", lane="train", worker=w)
+        return dead
 
     def healthy(self) -> bool:
         return not self.dead_workers()

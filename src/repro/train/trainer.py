@@ -26,6 +26,7 @@ from typing import Any, Callable
 import jax
 import numpy as np
 
+from repro import obs
 from repro.checkpoint import CheckpointManager
 from repro.train.monitor import HeartbeatMonitor, StragglerPolicy
 
@@ -195,16 +196,26 @@ class Trainer:
 
     def run(self) -> dict:
         cfg = self.cfg
+        m = obs.metrics()
         step = self.start_step
+        first_step = True
         while step < cfg.total_steps:
             if cfg.fail_at_step is not None and step == cfg.fail_at_step:
                 raise RuntimeError(f"injected node failure at step {step}")
             t0 = time.monotonic()
-            batch = self.batch_fn(step)
-            self.params, self.opt_state, loss = self._step_fn(
-                self.params, self.opt_state, batch)
-            loss = float(loss)
+            with obs.span("train:step", lane="train", step=step):
+                batch = self.batch_fn(step)
+                self.params, self.opt_state, loss = self._step_fn(
+                    self.params, self.opt_state, batch)
+                loss = float(loss)    # device sync: dt is true step time
             dt = time.monotonic() - t0
+            m.histogram("train.step_wall_s").observe(dt)
+            if first_step:
+                # the resumed-run first step pays trace + compile; record
+                # it apart so the steady-state histogram stays clean
+                m.gauge("train.first_step_wall_s").set(dt)
+                first_step = False
+            m.counter("train.steps").inc()
             self.heartbeat.beat("host0")
             self.straggler.observe(step, dt)
             self.losses.append(loss)

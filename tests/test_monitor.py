@@ -1,0 +1,120 @@
+"""Direct unit tests for the fault-tolerance monitors: straggler EWMA
+flagging (outlier-excluding), grace steps, heartbeat lapse detection,
+and their wiring into the obs metrics registry."""
+
+import pytest
+
+from repro import obs
+from repro.train.monitor import HeartbeatMonitor, StragglerPolicy
+
+
+@pytest.fixture(autouse=True)
+def _fresh_metrics():
+    obs.metrics().reset()
+    obs.disable()
+    yield
+    obs.metrics().reset()
+    obs.disable()
+
+
+# ---------------------------------------------------------------------------
+# StragglerPolicy
+# ---------------------------------------------------------------------------
+
+
+def test_grace_steps_never_flag():
+    pol = StragglerPolicy(grace_steps=3, slow_factor=2.0)
+    # wildly slow steps inside the grace window are ignored (warmup/compile)
+    assert not pol.observe(0, 100.0)
+    assert not pol.observe(1, 0.01)
+    assert not pol.observe(2, 500.0)
+    assert pol.events == []
+    # first post-grace observation seeds the EWMA, never flags
+    assert not pol.observe(3, 1.0)
+
+
+def test_ewma_flags_slow_step_and_excludes_outliers():
+    hits = []
+    pol = StragglerPolicy(grace_steps=0, slow_factor=3.0, ewma_alpha=0.5,
+                          on_straggler=lambda s, dt, e: hits.append(s))
+    pol.observe(0, 1.0)               # seeds ewma = 1.0
+    assert not pol.observe(1, 2.0)    # 2.0 < 3*1.0; ewma -> 1.5
+    assert pol.observe(2, 10.0)       # 10 > 3*1.5: flagged
+    assert hits == [2]
+    step, dt, ewma = pol.events[0]
+    assert (step, dt, ewma) == (2, 10.0, 1.5)
+    # the outlier was excluded from the EWMA, so an equally slow step
+    # right after still flags (one straggle must not mask the next)
+    assert pol.observe(3, 10.0)
+    assert len(pol.events) == 2
+
+
+def test_ewma_tracks_gradual_slowdown_without_flagging():
+    pol = StragglerPolicy(grace_steps=0, slow_factor=3.0, ewma_alpha=0.5)
+    pol.observe(0, 1.0)
+    for i, dt in enumerate([1.5, 2.0, 3.0, 4.0], start=1):
+        assert not pol.observe(i, dt), (i, dt)
+    assert pol.events == []
+
+
+def test_straggler_events_increment_metrics_and_trace():
+    pol = StragglerPolicy(grace_steps=0, slow_factor=2.0)
+    with obs.scoped() as tr:
+        pol.observe(0, 1.0)
+        pol.observe(1, 10.0)          # flagged
+        pol.observe(2, 10.0)          # flagged again (outlier-excluded ewma)
+    snap = obs.metrics().snapshot()
+    assert snap["counters"]["train.straggler_events"] == 2
+    marks = [e for e in tr.events if e.name == "straggler"]
+    assert len(marks) == 2 and marks[0].lane == "train"
+    assert marks[0].args["step"] == 1 and marks[0].args["dt_s"] == 10.0
+
+
+# ---------------------------------------------------------------------------
+# HeartbeatMonitor
+# ---------------------------------------------------------------------------
+
+
+def _manual_clock():
+    state = {"t": 0.0}
+
+    def clock():
+        return state["t"]
+
+    return state, clock
+
+
+def test_heartbeat_lapse_detection():
+    state, clock = _manual_clock()
+    hb = HeartbeatMonitor(timeout_s=10.0, clock=clock)
+    hb.beat("a")
+    hb.beat("b")
+    assert hb.healthy() and hb.dead_workers() == []
+    state["t"] = 9.0
+    assert hb.healthy()
+    state["t"] = 11.0
+    assert hb.dead_workers() == ["a", "b"]
+    assert not hb.healthy()
+    # a recovered worker drops off the dead list
+    hb.beat("a")
+    assert hb.dead_workers() == ["b"]
+
+
+def test_heartbeat_lapse_counts_once_until_recovery():
+    state, clock = _manual_clock()
+    hb = HeartbeatMonitor(timeout_s=10.0, clock=clock)
+    hb.beat("w")
+    state["t"] = 11.0
+    with obs.scoped() as tr:
+        assert hb.dead_workers() == ["w"]
+        assert hb.dead_workers() == ["w"]     # polling must not re-count
+    snap = obs.metrics().snapshot()
+    assert snap["counters"]["train.heartbeat_lapses"] == 1
+    lapses = [e for e in tr.events if e.name == "heartbeat_lapse"]
+    assert len(lapses) == 1 and lapses[0].args["worker"] == "w"
+    # recovery re-arms the counter for the next lapse
+    hb.beat("w")
+    state["t"] = 22.0
+    assert hb.dead_workers() == ["w"]
+    assert obs.metrics().snapshot()[
+        "counters"]["train.heartbeat_lapses"] == 2
