@@ -1,20 +1,30 @@
 """Microbatch pipeline vs sequential schedule execution (beyond-paper).
 
-Times the partitioned pipeline plan two ways:
+Times the partitioned pipeline plan three ways:
 
   * **modeled** — ``Schedule.pipeline(M, K)`` steady-state timeline on the
-    paper's LeNet-5 train step (4 partitions) and a full llama3-8b decode
-    step (2 partitions: the scanned layer stack | final norm + logits).
-    The acceptance bar is a >= 1.5x pipelined-over-sequential speedup at
-    8 microbatches on the balanced workload (lenet5 train); the
-    scan-dominated llama cut is recorded unbarred with its steady-state
-    decode tokens/s (one uncuttable scan unit holds ~94% of the work, so
-    its headroom is structural, not a regression).
+    paper's LeNet-5 train step (4 partitions) and the llama3-8b decode
+    step, with and without **scan expansion**. The historical full-llama
+    cut at 2 partitions is recorded unbarred (the scanned layer stack is
+    one uncuttable unit there, so its speedup is structural ~1x); the
+    expanded llama3-8b smoke decode (``expand_scans=True`` hoists the
+    stack into resident per-layer copies) carries a >= 2.0x bar at
+    4 partitions — the headline of the scan-residency feature. LeNet
+    keeps its >= 1.5x bar.
   * **executed** — wall-clock steps/s of the real GPipe microbatch driver
     (``repro.parallel.pipeline.run_partitioned``) vs the sequential
-    partitioned program on LeNet forward, proving the partition programs
-    actually stream (no bar: on one host the stages share the machine, so
-    this measures driver overhead, not pipeline parallelism).
+    partitioned program on LeNet forward (no bar: driver overhead only).
+  * **measured async** — wall-clock of the device-backed async driver
+    (``run_partitioned_async`` over stages pinned to 4 forced host
+    devices) vs sequential chaining of the same unpinned stage programs,
+    at 8 microbatches on the expanded llama3-8b smoke decode, in a
+    subprocess with ``--xla_force_host_platform_device_count=4``.
+    Bit-exact parity with the sequential driver is gated always; the
+    two wall-clock gates — a >= 1.3x speedup bar and a non-blocking
+    dispatch proof (the async driver must *return* well before the work
+    completes) — apply on hosts with >= 2 CPU cores, where overlap is
+    physically possible (CI runners). On a 1-core host both numbers are
+    still recorded, honestly, as whatever the serialized queues deliver.
 
 Emits CSV rows and writes ``BENCH_pipeline.json`` next to the repo root
 so the perf trajectory is recorded run over run.
@@ -23,7 +33,10 @@ so the perf trajectory is recorded run over run.
 from __future__ import annotations
 
 import json
+import os
 import pathlib
+import subprocess
+import sys
 import time
 
 import jax
@@ -31,8 +44,12 @@ import jax.numpy as jnp
 
 MICROBATCHES = 8
 SPEEDUP_BAR = 1.5
+EXPANDED_SPEEDUP_BAR = 2.0          # modeled, llama3-8b smoke, 4 partitions
+ASYNC_SPEEDUP_BAR = 1.3             # measured, >= 2 cores only
+ASYNC_DISPATCH_FRACTION_MAX = 0.5   # async driver must return well early
 
 _OUT = pathlib.Path(__file__).resolve().parent.parent / "BENCH_pipeline.json"
+_SRC = str(pathlib.Path(__file__).resolve().parent.parent / "src")
 
 
 def _timeline_entry(sched, microbatches: int, partitions: int) -> dict:
@@ -87,6 +104,96 @@ def _executed_entry(microbatches: int) -> dict:
     }
 
 
+# Runs in a subprocess so the 4 forced host devices never leak into the
+# parent's JAX runtime (device count locks at first init). Prints one
+# JSON line on success.
+_ASYNC_MEASURED = r"""
+import json, os, time
+import jax, jax.numpy as jnp
+from repro import mapper
+from repro.parallel import pipeline as pipe_mod
+
+M = 8
+devs = jax.devices()
+assert len(devs) >= 4, devs
+
+sched = mapper.map_arch("llama3-8b", "serve", smoke=True, partitions=4,
+                        expand_scans=True)
+plain = mapper.compile_partitioned(sched, use_cache=False)
+pinned = mapper.compile_partitioned(sched, use_cache=False,
+                                    devices=devs[:4])
+
+# concrete per-microbatch inputs straight from the traced avals
+avals = [v.aval for v in sched.graph.closed_jaxpr.jaxpr.invars]
+def mk(aval, seed):
+    if jnp.issubdtype(aval.dtype, jnp.floating):
+        return jax.random.normal(jax.random.PRNGKey(seed), aval.shape,
+                                 aval.dtype)
+    return jnp.zeros(aval.shape, aval.dtype)
+mbs = [[mk(a, 1000 * m + i) for i, a in enumerate(avals)]
+       for m in range(M)]
+
+def seq():
+    return pipe_mod.run_partitioned(plain.stages, plain.out_refs, mbs)
+
+def asy():
+    return pipe_mod.run_partitioned_async(pinned.stages, pinned.out_refs,
+                                          mbs)
+
+o_seq = seq()                       # warm stage jits (both rings)
+o_asy = asy()
+parity = 0.0
+for r1, r2 in zip(o_seq, o_asy):
+    for a, b in zip(r1, r2):
+        parity = max(parity, float(jnp.max(jnp.abs(
+            jnp.asarray(a, jnp.float32) - jnp.asarray(b, jnp.float32)))))
+
+def best(fn, reps=5):
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(jax.tree.leaves(fn()))
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+t_seq = best(seq)
+t_asy = best(asy)
+# non-blocking dispatch proof: the async driver returns while the device
+# queues still hold work
+t0 = time.perf_counter()
+out = asy()
+t_dispatch = time.perf_counter() - t0
+jax.block_until_ready(jax.tree.leaves(out))
+t_total = time.perf_counter() - t0
+
+print(json.dumps({
+    "microbatches": M,
+    "host_devices": 4,
+    "cpu_count": os.cpu_count() or 1,
+    "t_sequential_s": t_seq,
+    "t_async_s": t_asy,
+    "speedup": t_seq / t_asy,
+    "dispatch_s": t_dispatch,
+    "dispatch_fraction": t_dispatch / t_total,
+    "parity_max_dev": parity,
+}))
+"""
+
+
+def _async_measured_entry() -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=4 "
+                        + env.get("XLA_FLAGS", ""))
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run([sys.executable, "-c", _ASYNC_MEASURED], env=env,
+                         capture_output=True, text=True, timeout=580)
+    assert res.returncode == 0, res.stdout + res.stderr
+    entry = json.loads(res.stdout.strip().splitlines()[-1])
+    entry["speedup_bar"] = ASYNC_SPEEDUP_BAR
+    entry["speedup_bar_applies"] = entry["cpu_count"] >= 2
+    return entry
+
+
 def run() -> list[str]:
     from repro import mapper
 
@@ -97,8 +204,9 @@ def run() -> list[str]:
     results["lenet5_train_modeled"] = _timeline_entry(
         sched, MICROBATCHES, partitions=4)
 
-    # modeled: full llama3-8b decode, tokens/s at steady state (unbarred —
-    # the scanned layer stack is one uncuttable partition)
+    # modeled: full llama3-8b decode at the historical 2-partition cut
+    # (unbarred — without expansion the scanned stack is one uncuttable
+    # partition; kept as the before-picture of the expanded entry below)
     batch = 1
     sched = mapper.map_arch("llama3-8b", "serve", seq_len=32, batch=batch,
                             partitions=2)
@@ -106,27 +214,71 @@ def run() -> list[str]:
     entry["steady_tokens_per_s"] = batch * entry["steady_sets_per_s"]
     results["llama3_8b_decode_modeled"] = entry
 
+    # modeled: llama3-8b smoke decode with the stack expanded into
+    # resident per-layer copies — partition cuts land inside it (barred)
+    sched = mapper.map_arch("llama3-8b", "serve", smoke=True,
+                            expand_scans=True)
+    entry = _timeline_entry(sched, MICROBATCHES, partitions=4)
+    entry["expand_scans"] = True
+    entry["steady_tokens_per_s"] = entry["steady_sets_per_s"]
+    results["llama3_8b_smoke_expanded_modeled"] = entry
+
     # executed: real GPipe driver over the partition programs
     results["lenet5_forward_executed"] = _executed_entry(MICROBATCHES)
 
+    # measured: async device-backed driver vs sequential chaining
+    results["llama3_8b_async_measured"] = _async_measured_entry()
+
     _OUT.write_text(json.dumps(results, indent=2, sort_keys=True) + "\n")
 
+    # the acceptance bars are real gates: benchmarks.run exits non-zero
+    # on a raise, so a regression below a bar fails CI
     lt = results["lenet5_train_modeled"]
-    # the acceptance bar is a real gate: benchmarks.run exits non-zero on
-    # a raise, so the pipelined plan regressing below 1.5x fails CI
     assert lt["speedup"] >= SPEEDUP_BAR, (
         f"lenet5 train: pipelined speedup {lt['speedup']:.2f} at "
         f"{MICROBATCHES} microbatches fell below the "
         f"{SPEEDUP_BAR}x acceptance bar")
 
+    ex = results["llama3_8b_smoke_expanded_modeled"]
+    assert ex["speedup"] >= EXPANDED_SPEEDUP_BAR, (
+        f"llama3-8b smoke expanded: modeled speedup {ex['speedup']:.2f} "
+        f"at 4 partitions fell below the {EXPANDED_SPEEDUP_BAR}x bar — "
+        f"scan expansion stopped cutting the stack")
+
+    am = results["llama3_8b_async_measured"]
+    assert am["parity_max_dev"] == 0.0, (
+        f"async driver diverged from sequential chaining by "
+        f"{am['parity_max_dev']:.3e}")
+    if am["speedup_bar_applies"]:
+        # both wall-clock gates need >= 2 cores: on one core the XLA
+        # compute threads and the Python dispatch loop share the core,
+        # so neither overlap nor early-return is physically observable
+        # (the numbers are still recorded above, honestly serialized)
+        assert am["dispatch_fraction"] <= ASYNC_DISPATCH_FRACTION_MAX, (
+            f"async driver blocked during dispatch: returned after "
+            f"{am['dispatch_fraction']:.0%} of the wall time")
+        assert am["speedup"] >= ASYNC_SPEEDUP_BAR, (
+            f"async device-backed driver: measured speedup "
+            f"{am['speedup']:.2f} on {am['cpu_count']} cores fell below "
+            f"the {ASYNC_SPEEDUP_BAR}x bar")
+
     rows = []
     for tag, r in results.items():
         for key in ("speedup", "steady_sets_per_s", "steady_tokens_per_s",
-                    "interval_s", "gpipe_steps_per_s", "driver_overhead"):
+                    "interval_s", "gpipe_steps_per_s", "driver_overhead",
+                    "dispatch_fraction", "parity_max_dev"):
             if key in r:
-                note = (f"target>={SPEEDUP_BAR}"
-                        if (tag, key) == ("lenet5_train_modeled", "speedup")
-                        else "")
+                note = ""
+                if (tag, key) == ("lenet5_train_modeled", "speedup"):
+                    note = f"target>={SPEEDUP_BAR}"
+                elif (tag, key) == ("llama3_8b_smoke_expanded_modeled",
+                                    "speedup"):
+                    note = f"target>={EXPANDED_SPEEDUP_BAR}"
+                elif (tag, key) == ("llama3_8b_async_measured", "speedup"):
+                    note = (f"target>={ASYNC_SPEEDUP_BAR}"
+                            if r.get("speedup_bar_applies")
+                            else f"1-core host: {ASYNC_SPEEDUP_BAR}x bar "
+                                 f"applies on >=2 cores")
                 rows.append(f"pipeline.{tag}.{key},{r[key]:.4g},{note}")
     rows.append(f"pipeline.json,{_OUT.name},perf trajectory artifact")
     return rows

@@ -30,6 +30,12 @@ GATES = {
     },
     "BENCH_pipeline": {
         "lenet5_train_modeled": ["speedup"],
+        "llama3_8b_smoke_expanded_modeled": ["speedup",
+                                             "steady_tokens_per_s",
+                                             "interval_s"],
+        "llama3_8b_async_measured": ["speedup", "t_sequential_s",
+                                     "t_async_s", "dispatch_fraction",
+                                     "parity_max_dev", "cpu_count"],
     },
     "BENCH_serve": {
         "paged_router_2": ["speedup_vs_contiguous_1", "ttft_p50_s",

@@ -29,7 +29,9 @@ from repro.mapper.compile import (CompiledProgram, PartitionedProgram,
 from repro.mapper.executor import ScheduleExecutor, run_schedule
 from repro.mapper.lowering import LoweringContext, eval_placed
 from repro.mapper.graph import (ConvNode, EltwiseNode, MatmulNode, OpGraph,
-                                OpNode, build_graph)
+                                OpNode, build_graph, expand_graph,
+                                expand_scans, plan_scan_expansion,
+                                scan_lengths)
 from repro.mapper.hardware import (ChipSpec, PIMHierarchy, SubarraySpec,
                                    TileSpec, curve_candidates,
                                    default_hierarchy, make_subarray,
@@ -53,7 +55,8 @@ __all__ = [
     "build_schedule", "build_schedule_from_graph", "clear_program_cache",
     "compile_arch", "compile_lenet", "compile_partitioned",
     "compile_schedule", "curve_candidates", "default_hierarchy",
-    "eval_placed", "make_subarray", "map_arch", "map_lenet", "node_homes",
-    "partition", "place", "place_kv", "program_cache_stats", "run_schedule",
-    "tile_curve", "total_transfer_hops",
+    "eval_placed", "expand_graph", "expand_scans", "make_subarray",
+    "map_arch", "map_lenet", "node_homes", "partition", "place", "place_kv",
+    "plan_scan_expansion", "program_cache_stats", "run_schedule",
+    "scan_lengths", "tile_curve", "total_transfer_hops",
 ]

@@ -43,14 +43,19 @@ def map_arch(name: str, kind: str = "train", *, seq_len: int = 128,
              hierarchy: PIMHierarchy | None = None,
              policy: placement_mod.PlacementPolicy | None = None,
              tech: str = "proposed",
-             partitions: int | None = None) -> schedule_mod.Schedule:
+             partitions: int | None = None,
+             expand_scans: bool = False,
+             expand_budget: int | None = None) -> schedule_mod.Schedule:
     """Map one registered architecture's train / serve step.
 
     ``kind='train'`` schedules a full optimizer step (fwd + bwd + update);
     ``kind='serve'`` schedules one decode step against a ``seq_len`` cache.
     ``smoke=True`` uses the reduced config (fast CI path).
     ``partitions=K`` cuts the step into K pipeline partitions (see
-    ``Schedule.pipeline`` / ``compile_partitioned``).
+    ``Schedule.pipeline`` / ``compile_partitioned``);
+    ``expand_scans=True`` first expands the scanned layer stack into
+    resident per-layer copies (capacity-bucketed against
+    ``expand_budget`` subarrays) so cuts can land inside it.
     """
     from repro.launch import steps as steps_mod
 
@@ -68,7 +73,8 @@ def map_arch(name: str, kind: str = "train", *, seq_len: int = 128,
         return schedule_mod.build_schedule(
             step, p_shapes, o_shapes, b_shapes,
             hierarchy=hierarchy, policy=policy, tech=tech,
-            partitions=partitions)
+            partitions=partitions, expand_scans=expand_scans,
+            expand_budget=expand_budget)
     if kind == "serve":
         step = steps_mod.make_serve_step(cfg)
         c_shapes = steps_mod.abstract_cache(cfg, shape)
@@ -76,7 +82,8 @@ def map_arch(name: str, kind: str = "train", *, seq_len: int = 128,
         return schedule_mod.build_schedule(
             step, p_shapes, c_shapes, token, pos,
             hierarchy=hierarchy, policy=policy, tech=tech,
-            partitions=partitions)
+            partitions=partitions, expand_scans=expand_scans,
+            expand_budget=expand_budget)
     raise ValueError(f"kind must be 'train' or 'serve', got {kind!r}")
 
 
@@ -84,9 +91,12 @@ def map_lenet(kind: str = "serve", *, batch: int = 4, lr: float = 0.05,
               hierarchy: PIMHierarchy | None = None,
               policy: placement_mod.PlacementPolicy | None = None,
               tech: str = "proposed",
-              partitions: int | None = None) -> schedule_mod.Schedule:
+              partitions: int | None = None,
+              expand_scans: bool = False) -> schedule_mod.Schedule:
     """Map the paper's LeNet: ``serve`` = forward pass, ``train`` = one
-    SGD step on the cross-entropy loss."""
+    SGD step on the cross-entropy loss. ``expand_scans`` is accepted for
+    parity with :func:`map_arch` (LeNet lowers scan-free, so expansion
+    is a no-op)."""
     from repro.configs.lenet5 import CONFIG
     from repro.models import lenet
 
@@ -97,7 +107,7 @@ def map_lenet(kind: str = "serve", *, batch: int = 4, lr: float = 0.05,
         return schedule_mod.build_schedule(
             lenet.lenet_apply, _abstract(params), images,
             hierarchy=hierarchy, policy=policy, tech=tech,
-            partitions=partitions)
+            partitions=partitions, expand_scans=expand_scans)
     if kind == "train":
         labels = jax.ShapeDtypeStruct((batch,), jnp.int32)
 
@@ -110,7 +120,7 @@ def map_lenet(kind: str = "serve", *, batch: int = 4, lr: float = 0.05,
         return schedule_mod.build_schedule(
             train_step, _abstract(params), images, labels,
             hierarchy=hierarchy, policy=policy, tech=tech,
-            partitions=partitions)
+            partitions=partitions, expand_scans=expand_scans)
     raise ValueError(f"kind must be 'train' or 'serve', got {kind!r}")
 
 
@@ -119,15 +129,19 @@ def compile_arch(name: str, kind: str = "train", *, seq_len: int = 128,
                  hierarchy: PIMHierarchy | None = None,
                  policy: placement_mod.PlacementPolicy | None = None,
                  tech: str = "proposed", block: int = 128,
-                 interpret: bool = True, partitions: int | None = None):
+                 interpret: bool = True, partitions: int | None = None,
+                 expand_scans: bool = False, devices=None):
     """Map one architecture's step and compile it to a jittable program
-    (a ``PartitionedProgram`` of K stage programs when ``partitions=K``)."""
+    (a ``PartitionedProgram`` of K stage programs when ``partitions=K``;
+    ``devices`` pins each stage program to its own JAX device for the
+    async pipeline driver)."""
     sched = map_arch(name, kind, seq_len=seq_len, batch=batch, smoke=smoke,
                      hierarchy=hierarchy, policy=policy, tech=tech,
-                     partitions=partitions)
+                     partitions=partitions, expand_scans=expand_scans)
     if partitions:
         return compile_mod.compile_partitioned(sched, block=block,
-                                               interpret=interpret)
+                                               interpret=interpret,
+                                               devices=devices)
     return compile_mod.compile_schedule(sched, block=block,
                                         interpret=interpret)
 
@@ -136,13 +150,16 @@ def compile_lenet(kind: str = "serve", *, batch: int = 4, lr: float = 0.05,
                   hierarchy: PIMHierarchy | None = None,
                   policy: placement_mod.PlacementPolicy | None = None,
                   tech: str = "proposed", block: int = 128,
-                  interpret: bool = True, partitions: int | None = None):
+                  interpret: bool = True, partitions: int | None = None,
+                  devices=None):
     """Map the paper's LeNet and compile it to a jittable program
-    (a ``PartitionedProgram`` of K stage programs when ``partitions=K``)."""
+    (a ``PartitionedProgram`` of K stage programs when ``partitions=K``;
+    ``devices`` pins stages for the async pipeline driver)."""
     sched = map_lenet(kind, batch=batch, lr=lr, hierarchy=hierarchy,
                       policy=policy, tech=tech, partitions=partitions)
     if partitions:
         return compile_mod.compile_partitioned(sched, block=block,
-                                               interpret=interpret)
+                                               interpret=interpret,
+                                               devices=devices)
     return compile_mod.compile_schedule(sched, block=block,
                                         interpret=interpret)

@@ -55,7 +55,6 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import warnings
 from typing import Any, Callable
 
 import jax
@@ -103,14 +102,6 @@ class CompiledProgram:
     def placed_blocks(self) -> int:
         """Placed block matmuls baked into the program (work, totalled
         over traces)."""
-        return self.ctx.placed_blocks
-
-    @property
-    def placed_calls(self) -> int:
-        """Deprecated alias of ``placed_blocks``."""
-        warnings.warn(
-            "CompiledProgram.placed_calls is deprecated; use "
-            "placed_blocks", DeprecationWarning, stacklevel=2)
         return self.ctx.placed_blocks
 
     @property
@@ -170,7 +161,8 @@ _STATS = {"hits": 0, "misses": 0}
 
 
 def _program_key(schedule: Schedule, block: int, interpret: bool,
-                 group: bool, fuse: bool, boundaries: tuple = ()) -> tuple:
+                 group: bool, fuse: bool, boundaries: tuple = (),
+                 devices: tuple = ()) -> tuple:
     closed = schedule.graph.closed_jaxpr
     avals = tuple((tuple(v.aval.shape), str(v.aval.dtype))
                   for v in closed.jaxpr.invars)
@@ -178,9 +170,11 @@ def _program_key(schedule: Schedule, block: int, interpret: bool,
     fn_key: Any = fn if fn is not None else id(closed)
     # placement.signature() folds in the hierarchy fingerprint (tech +
     # tile/chip geometry), so same-grid placements on different machines
-    # get distinct keys
+    # get distinct keys; the stage device assignment is part of the key
+    # too — same cut on different device rings is a different program
     return (fn_key, avals, schedule.placement.signature(),
-            block, interpret, group, fuse, boundaries)
+            block, interpret, group, fuse, boundaries,
+            tuple(str(d) for d in devices))
 
 
 def program_cache_stats() -> dict[str, int]:
@@ -288,6 +282,10 @@ class StageProgram:
     in_refs: tuple[tuple, ...]
     n_outs: int
     out_bits: int                 # activation bits this stage streams out
+    device: Any = None            # pinned JAX device (None = unpinned):
+                                  # drivers device_put inputs here (non-
+                                  # blocking) and jit follows the committed
+                                  # inputs onto the stage's own async queue
 
 
 @dataclasses.dataclass
@@ -327,15 +325,37 @@ class PartitionedProgram:
         return len(self.stages)
 
     @property
-    def placed_blocks(self) -> int:
-        return self.ctx.placed_blocks
+    def devices(self) -> tuple:
+        """Per-stage pinned devices (``None`` entries = unpinned)."""
+        return tuple(st.device for st in self.stages)
+
+    def run_async(self, *args, **kwargs):
+        """Run the stages in order with non-blocking ``device_put``
+        transfers at the cut points, without jitting the chain as a whole
+        — each pinned stage executes on its own device, and nothing
+        blocks, so JAX async dispatch overlaps this call with whatever
+        the caller does next. Token/loss outputs are bit-identical to
+        ``self(*args)`` (same stage programs, same order); callers
+        observe values (or ``jax.block_until_ready``) to sync."""
+        flat = self.flatten_args(*args, **kwargs)
+        stage_outs: list[tuple] = []
+
+        def resolve(ref):
+            if ref[0] == "arg":
+                return flat[ref[1]]
+            if ref[0] == "stage":
+                return stage_outs[ref[1]][ref[2]]
+            return ref[1]                  # ("lit", val)
+
+        for st in self.stages:
+            ins = [resolve(r) for r in st.in_refs]
+            if st.device is not None:
+                ins = [jax.device_put(x, st.device) for x in ins]
+            stage_outs.append(st.jitted(*ins))
+        return self.unflatten_outs([resolve(r) for r in self.out_refs])
 
     @property
-    def placed_calls(self) -> int:
-        """Deprecated alias of ``placed_blocks``."""
-        warnings.warn(
-            "PartitionedProgram.placed_calls is deprecated; use "
-            "placed_blocks", DeprecationWarning, stacklevel=2)
+    def placed_blocks(self) -> int:
         return self.ctx.placed_blocks
 
     @property
@@ -394,8 +414,8 @@ def _aval_bits(v) -> int:
 def compile_partitioned(schedule: Schedule, *,
                         partitions: int | None = None, block: int = 128,
                         interpret: bool = True, group: bool = True,
-                        fuse: bool = True,
-                        use_cache: bool = True) -> PartitionedProgram:
+                        fuse: bool = True, use_cache: bool = True,
+                        devices=None) -> PartitionedProgram:
     """Lower ``schedule`` into one jittable program per pipeline partition.
 
     Uses the partitions the schedule was built with
@@ -404,6 +424,14 @@ def compile_partitioned(schedule: Schedule, *,
     its upstream boundary (tagged with provenance) and returns the values
     crossing its downstream boundary — the explicit transfer points the
     microbatch pipeline driver streams.
+
+    ``devices`` (a sequence of JAX devices) pins stage ``i`` to
+    ``devices[i % len(devices)]``: the async drivers
+    (``PartitionedProgram.run_async``,
+    ``repro.parallel.pipeline.run_partitioned_async``) then route each
+    stage's inputs there with non-blocking ``device_put`` so stages
+    execute concurrently on their own device queues. Force N host devices
+    locally with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
     """
     parts = schedule.partitions
     if partitions is not None:
@@ -413,10 +441,11 @@ def compile_partitioned(schedule: Schedule, *,
             "schedule has no pipeline partitions; build it with "
             "build_schedule(..., partitions=K) or pass partitions=K")
     boundaries = tuple((p.eqn_start, p.eqn_end) for p in parts)
+    dev_ring = tuple(devices) if devices else ()
 
     if use_cache:
         key = _program_key(schedule, block, interpret, group, fuse,
-                           boundaries)
+                           boundaries, dev_ring)
         hit = _CACHE.get(key)
         if hit is not None and isinstance(hit, PartitionedProgram):
             _STATS["hits"] += 1
@@ -485,7 +514,8 @@ def compile_partitioned(schedule: Schedule, *,
         stages.append(StageProgram(
             idx=p.idx, fn=stage_fn, jitted=jax.jit(stage_fn),
             in_refs=tuple(in_refs), n_outs=len(out_vars),
-            out_bits=sum(_aval_bits(v) for v in out_vars)))
+            out_bits=sum(_aval_bits(v) for v in out_vars),
+            device=dev_ring[p.idx % len(dev_ring)] if dev_ring else None))
 
     out_refs: list[tuple] = []
     for v in jaxpr.outvars:

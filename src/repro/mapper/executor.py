@@ -28,7 +28,6 @@ path actually ran (here launches == blocks + eltwise by construction).
 from __future__ import annotations
 
 import dataclasses
-import warnings
 
 import jax
 import numpy as np
@@ -61,14 +60,6 @@ class ScheduleExecutor:
     # kernel-routed work/dispatch counters live on the shared lowering ctx
     @property
     def placed_blocks(self) -> int:
-        return self._ctx.placed_blocks
-
-    @property
-    def placed_calls(self) -> int:
-        """Deprecated alias of ``placed_blocks``."""
-        warnings.warn(
-            "ScheduleExecutor.placed_calls is deprecated; use "
-            "placed_blocks", DeprecationWarning, stacklevel=2)
         return self._ctx.placed_blocks
 
     @property

@@ -62,7 +62,6 @@ tests in tests/test_compile.py pin the supported surface.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Any, Callable
 
 import jax
@@ -98,8 +97,7 @@ class LoweringContext:
     / ``eltwise_launches`` count actual ``pallas_call`` dispatches per
     kind, with ``kernel_launches`` their sum. Under the interpreter they
     count per run; under the compiler they count per *trace* (the kernel
-    calls baked into the program). ``placed_calls`` remains as a
-    deprecated alias of ``placed_blocks``.
+    calls baked into the program).
     """
 
     schedule: Any                 # repro.mapper.schedule.Schedule
@@ -121,14 +119,6 @@ class LoweringContext:
     def kernel_launches(self) -> int:
         """All ``pallas_call`` dispatches (matmul + eltwise)."""
         return self.matmul_launches + self.eltwise_launches
-
-    @property
-    def placed_calls(self) -> int:
-        """Deprecated alias of ``placed_blocks``."""
-        warnings.warn(
-            "LoweringContext.placed_calls is deprecated; use "
-            "placed_blocks", DeprecationWarning, stacklevel=2)
-        return self.placed_blocks
 
     def subtree_has_placed(self, jaxpr) -> bool:
         """True if any equation reachable from ``jaxpr`` is a graph node."""

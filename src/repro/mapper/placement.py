@@ -41,7 +41,11 @@ Nodes inside ``scan`` bodies (``repeat > 1`` — scanned layer stacks, grad
 accumulation) are placed once and time-multiplexed: successive iterations
 stream their weight slice into the same block grid, and the scheduler
 serializes all ``repeat`` passes through the placed lanes. Partition cuts
-therefore never land inside a scan body — a scanned stack is one unit.
+never land inside a scan body — a scanned stack is one unit — *unless*
+the graph was first expanded with ``repro.mapper.graph.expand_graph``
+(``build_schedule(..., expand_scans=True)``), which rewrites a scan into
+resident per-layer copies at top level when subarray capacity allows, so
+the cuts below can fall between the copies.
 """
 
 from __future__ import annotations
@@ -209,7 +213,8 @@ def partition(graph: OpGraph, k: int, *, n_bits: int = 32,
     """Cut ``graph`` into ``k`` balanced pipeline partitions.
 
     Boundaries land on top-level equation boundaries (the only executable
-    split points — a scanned layer stack is one uncuttable unit). A first
+    split points — a scanned layer stack is one uncuttable unit unless
+    ``expand_graph`` hoisted its layers to top level first). A first
     DP finds the best achievable bottleneck (minimal max partition work);
     a second DP then picks, among all boundary sets whose bottleneck stays
     within ``1 + balance_slack`` of that optimum, the one moving the

@@ -380,13 +380,30 @@ def _chip_lanes(ideal) -> int:
     return ideal.n_subarrays * acc_mod.SUBARRAY_COLS
 
 
+# Default subarray budget for scan expansion, in chips: expanding a
+# scanned stack into resident per-layer copies may only grow the weight
+# footprint up to this many chips' worth of subarrays before the planner
+# buckets (ceil(R/g) copies) or refuses (see
+# ``graph.plan_scan_expansion``). Override per call via ``expand_budget``.
+EXPAND_BUDGET_CHIPS = 64
+
+
 def build_schedule_from_graph(
         graph: graph_mod.OpGraph,
         hierarchy: PIMHierarchy | None = None,
         policy: placement_mod.PlacementPolicy | None = None,
         tech: str = "proposed",
-        partitions: int | None = None) -> Schedule:
+        partitions: int | None = None,
+        expand_scans: bool = False,
+        expand_budget: int | None = None) -> Schedule:
     hierarchy = hierarchy or default_hierarchy(tech)
+    if expand_scans:
+        sub_ = hierarchy.subarray
+        budget = (expand_budget if expand_budget is not None
+                  else EXPAND_BUDGET_CHIPS * hierarchy.subarrays_per_chip)
+        graph = graph_mod.expand_graph(graph, weight_rows=sub_.weight_rows,
+                                       weight_cols=sub_.weight_cols,
+                                       budget=budget)
     parts = (placement_mod.partition(graph, partitions)
              if partitions else None)
     place = placement_mod.place(graph, hierarchy, policy, partitions=parts)
@@ -458,17 +475,25 @@ def build_schedule(fn: Callable, *args,
                    hierarchy: PIMHierarchy | None = None,
                    policy: placement_mod.PlacementPolicy | None = None,
                    tech: str = "proposed",
-                   partitions: int | None = None, **kwargs) -> Schedule:
+                   partitions: int | None = None,
+                   expand_scans: bool = False,
+                   expand_budget: int | None = None, **kwargs) -> Schedule:
     """Compile ``fn(*args, **kwargs)`` into a placed, cost-rolled static
     schedule (args may be ShapeDtypeStructs; nothing is allocated).
     ``partitions=K`` additionally cuts the graph into K pipeline
     partitions, aligns their placements to tile boundaries, and enables
-    :meth:`Schedule.pipeline` / partitioned compilation."""
+    :meth:`Schedule.pipeline` / partitioned compilation.
+    ``expand_scans=True`` first expands scanned layer stacks into resident
+    per-layer copies where subarray capacity allows (budget
+    ``expand_budget`` subarrays, default ``EXPAND_BUDGET_CHIPS`` chips'
+    worth), so partition cuts can land *inside* the stacks."""
     with obs.span("build:schedule", lane="compile"):
         g = graph_mod.build_graph(fn, *args, **kwargs)
         sched = build_schedule_from_graph(g, hierarchy=hierarchy,
                                           policy=policy, tech=tech,
-                                          partitions=partitions)
+                                          partitions=partitions,
+                                          expand_scans=expand_scans,
+                                          expand_budget=expand_budget)
     m = obs.metrics()
     m.counter("mapper.schedules_built").inc()
     m.gauge("mapper.last_modeled_latency_s").set(sched.report.latency_s)

@@ -45,8 +45,9 @@ from __future__ import annotations
 
 import contextlib
 
-from repro.obs.drift import (DriftReport, NodeDrift, drift_report,
-                             measure_drift)
+from repro.obs.drift import (DriftReport, NodeDrift, PipelineDrift,
+                             StageOccupancy, drift_report, measure_drift,
+                             pipeline_drift)
 from repro.obs.metrics import (DEFAULT_EDGES, Counter, Gauge, Histogram,
                                MetricsRegistry)
 from repro.obs.trace import (NULL_TRACER, NullTracer, SpanEvent, Tracer,
@@ -111,7 +112,8 @@ def instant(name: str, lane: str = "main", **args) -> None:
 __all__ = [
     "Counter", "DEFAULT_EDGES", "DriftReport", "Gauge", "Histogram",
     "MetricsRegistry", "NULL_TRACER", "NodeDrift", "NullTracer",
-    "SpanEvent", "Tracer", "disable", "drift_report", "enable", "instant",
-    "is_enabled", "measure_drift", "metrics", "scoped", "span", "tracer",
+    "PipelineDrift", "SpanEvent", "StageOccupancy", "Tracer", "disable",
+    "drift_report", "enable", "instant", "is_enabled", "measure_drift",
+    "metrics", "pipeline_drift", "scoped", "span", "tracer",
     "validate_chrome_trace",
 ]

@@ -154,6 +154,111 @@ def drift_report(schedule: Any, tracer: Tracer | None = None) -> DriftReport:
         kv_modeled_s=schedule.kv.t_s if schedule.kv is not None else 0.0)
 
 
+@dataclasses.dataclass(frozen=True)
+class StageOccupancy:
+    """Modeled vs measured busy time of one pipeline stage (partition)."""
+
+    stage: int
+    modeled_s: float              # PartitionCost.t_compute_s x cells run
+    measured_s: float             # sum of this stage's pipeline span durs
+    cells: int                    # (tick, microbatch) cells measured
+    ratio: float                  # measured / modeled (inf if modeled == 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineDrift:
+    """Modeled :class:`~repro.mapper.schedule.PipelineTimeline` vs the
+    measured GPipe drivers' pipeline-lane spans."""
+
+    microbatches: int
+    stages: tuple[StageOccupancy, ...]
+    modeled_interval_s: float     # steady-state initiation interval
+    measured_interval_s: float    # measured bottleneck occupancy / M
+    ratio: float
+    transfers: int                # cut-point device_put instants recorded
+
+    def summary(self, top: int = 4) -> str:
+        lines = [
+            f"pipeline drift: measured interval "
+            f"{self.measured_interval_s:.3e} s vs modeled "
+            f"{self.modeled_interval_s:.3e} s (x{self.ratio:.1f}); "
+            f"{len(self.stages)} stages, {self.transfers} transfers"]
+        for s in sorted(self.stages, key=lambda s: s.ratio,
+                        reverse=True)[:top]:
+            lines.append(
+                f"  stage {s.stage}: modeled {s.modeled_s:.3e} s "
+                f"measured {s.measured_s:.3e} s  x{s.ratio:.1f} "
+                f"({s.cells} cells)")
+        return "\n".join(lines)
+
+    def to_dict(self) -> dict:
+        return {
+            "microbatches": self.microbatches,
+            "modeled_interval_s": self.modeled_interval_s,
+            "measured_interval_s": self.measured_interval_s,
+            "ratio": self.ratio,
+            "transfers": self.transfers,
+            "stages": [dataclasses.asdict(s) for s in self.stages],
+        }
+
+
+def pipeline_drift(timeline: Any, tracer: Tracer | None = None,
+                   ) -> PipelineDrift:
+    """Join the GPipe drivers' measured pipeline spans against a modeled
+    :class:`~repro.mapper.schedule.PipelineTimeline`.
+
+    The drivers in ``repro.parallel.pipeline`` record one span per
+    (tick, stage, microbatch) cell on the ``pipeline`` lane (sequential
+    driver) or per-stage ``pipeline:stage{s}`` lanes (async driver), each
+    tagged ``stage=``; cut-point handoffs appear as ``transfer``
+    instants. Per stage, measured occupancy is the span-duration sum and
+    the modeled equivalent is the partition's ``t_compute_s`` times the
+    cells it actually ran (forward-only runs measure M cells; the
+    value-and-grad driver measures forward and backward cells, so expect
+    ratios near the fwd+bwd multiple). The interval comparison divides
+    the bottleneck stage's occupancy by the microbatch count — the
+    measured steady-state initiation interval against the modeled one.
+    """
+    if tracer is None:
+        from repro import obs
+        tracer = obs.tracer()
+    events = getattr(tracer, "events", [])   # NullTracer records nothing
+    spans = [s for s in events               # .spans() drops instants
+             if s.lane == "pipeline" or s.lane.startswith("pipeline:")]
+    cells = [s for s in spans if s.kind == "span"
+             and s.args.get("stage") is not None]
+    if not cells:
+        raise ValueError(
+            "no pipeline-lane stage spans recorded — run a "
+            "repro.parallel.pipeline driver with observability enabled "
+            "(repro.obs.enable())")
+    measured: dict[int, float] = {}
+    counts: dict[int, int] = {}
+    for s in cells:
+        st = s.args["stage"]
+        measured[st] = measured.get(st, 0.0) + s.dur_s
+        counts[st] = counts.get(st, 0) + 1
+    transfers = sum(1 for s in spans
+                    if s.kind == "instant" and s.name == "transfer")
+
+    m = timeline.microbatches
+    stages = []
+    for p in timeline.partitions:
+        meas = measured.get(p.idx, 0.0)
+        n = counts.get(p.idx, 0)
+        modeled = p.t_compute_s * n
+        stages.append(StageOccupancy(
+            stage=p.idx, modeled_s=modeled, measured_s=meas, cells=n,
+            ratio=_ratio(meas, modeled)))
+    measured_interval = (max(measured.values()) / m) if m else 0.0
+    return PipelineDrift(
+        microbatches=m, stages=tuple(stages),
+        modeled_interval_s=timeline.interval_s,
+        measured_interval_s=measured_interval,
+        ratio=_ratio(measured_interval, timeline.interval_s),
+        transfers=transfers)
+
+
 def measure_drift(schedule: Any, *args, group: bool = False,
                   fuse: bool = False, interpret: bool = True,
                   block: int = 128, **kwargs) -> DriftReport:

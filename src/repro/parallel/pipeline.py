@@ -13,10 +13,16 @@ fraction = (P-1)/(M+P-1)):
     be stacked per-stage: params leaves shaped [P, layers_per_stage, ...]
     with the leading P dim sharded over the pipe axis.
   * **PIM partition pipelining** (``gpipe_grid`` / ``run_partitioned`` /
-    ``gpipe_value_and_grad``): the stages are the per-partition programs
-    of ``repro.mapper.compile.compile_partitioned`` — weight blocks stay
+    ``run_partitioned_async`` / ``gpipe_value_and_grad``): the stages
+    are the per-partition programs of
+    ``repro.mapper.compile.compile_partitioned`` — weight blocks stay
     resident on their tiles and activation sets stream through the
-    explicit transfer points. The forward driver walks the GPipe grid;
+    explicit transfer points. When ``compile_partitioned(...,
+    devices=...)`` pinned each stage to its own JAX device, the drivers
+    commit every cell's inputs there with non-blocking ``device_put``
+    and ``run_partitioned_async`` keeps the whole grid on the devices'
+    async queues, so fill/steady/drain overlap is measured wall-clock
+    speedup, not just the modeled timeline. The forward driver walks the GPipe grid;
     training differentiates *per stage* with ``jax.vjp`` (forward ticks
     stash pullbacks, backward ticks run them in reverse grid order,
     accumulating boundary cotangents stage-to-stage and argument
@@ -135,6 +141,28 @@ def _traceable(vals) -> bool:
     return not any(isinstance(x, jax.core.Tracer) for x in vals)
 
 
+def _stage_put(stage, ins, *, tick=None, micro=None):
+    """Commit a stage's inputs onto its pinned device, if it has one.
+
+    ``jax.device_put`` is non-blocking: it enqueues the transfer and
+    returns immediately, even when the source value is itself still being
+    computed on another device's queue. Because the stage's jitted
+    program then follows its committed inputs, this is the entire
+    device-routing mechanism — no ``jit(device=...)``. Transfers at cut
+    points are recorded as zero-duration tracer instants (never blocked
+    on) so traces show *when* activations were handed off without
+    serializing the pipeline."""
+    dev = getattr(stage, "device", None)
+    if dev is None:
+        return ins
+    moved = [jax.device_put(x, dev) for x in ins]
+    tr = obs.tracer()
+    if tr.enabled and _traceable(ins):
+        tr.instant("transfer", lane="pipeline", device=str(dev),
+                   tick=tick, micro=micro)
+    return moved
+
+
 def run_partitioned(stages: Sequence, out_refs: Sequence,
                     flat_args_per_mb: Sequence[Sequence]) -> list[list]:
     """Stream M microbatches through the partition stage programs in GPipe
@@ -152,11 +180,77 @@ def run_partitioned(stages: Sequence, out_refs: Sequence,
     for t, s, m in gpipe_grid(n_stages, n_micro):
         ins = [_resolve(r, flat_args_per_mb[m], outs[m])
                for r in stages[s].in_refs]
+        ins = _stage_put(stages[s], ins, tick=t, micro=m)
         run = getattr(stages[s], "jitted", None) or stages[s].fn
         tr = obs.tracer()
         if tr.enabled and _traceable(ins):
             with tr.span(f"{tick_phase(t, n_stages, n_micro)}:tick",
                          lane="pipeline", tick=t, stage=s, micro=m):
+                outs[m][s] = run(*ins)
+                jax.block_until_ready(outs[m][s])
+        else:
+            outs[m][s] = run(*ins)
+    return [[_resolve(r, flat_args_per_mb[m], outs[m]) for r in out_refs]
+            for m in range(n_micro)]
+
+
+def run_partitioned_async(stages: Sequence, out_refs: Sequence,
+                          flat_args_per_mb: Sequence[Sequence]) -> list[list]:
+    """Async GPipe driver over device-pinned stage programs.
+
+    Same grid, same dataflow, same numerics as :func:`run_partitioned` —
+    the difference is purely *when* Python waits. Every cell's inputs are
+    committed to the stage's pinned device with non-blocking
+    ``device_put`` and the stage's jitted program is dispatched onto that
+    device's async queue; the Python loop never blocks, so by the time
+    the grid is enumerated, every device holds its whole per-stage work
+    queue and fill/steady/drain overlap happens in wall-clock time (XLA
+    executes each queue in order; cross-device transfers synchronize at
+    the cut points). Callers observe the overlap simply by blocking on
+    the returned outputs.
+
+    With a tracer enabled the driver records per-stage lanes
+    (``pipeline:stage{s}``) with ``block_until_ready`` inside each span
+    plus transfer instants at the cut points — faithful per-cell
+    occupancy, but the measurement itself serializes the queues, so
+    enable tracing to *attribute* time and disable it to *measure*
+    speedup.
+
+    Stages without a pinned device still work (single shared queue);
+    they just cannot overlap with each other.
+    """
+    n_micro = len(flat_args_per_mb)
+    n_stages = len(stages)
+    outs = [[None] * n_stages for _ in range(n_micro)]
+    tr = obs.tracer()
+    # per-call transfer memo: the same source array (params reused by
+    # every microbatch) is copied to a given stage device once, not once
+    # per cell — arrays are immutable, so reuse is always safe
+    moved: dict[tuple[int, str], Any] = {}
+
+    def put(x, dev, t, m):
+        key = (id(x), str(dev))
+        hit = moved.get(key)
+        if hit is not None:
+            return hit
+        y = jax.device_put(x, dev)
+        moved[key] = y
+        if tr.enabled and _traceable((x,)):
+            tr.instant("transfer", lane="pipeline", device=str(dev),
+                       tick=t, micro=m)
+        return y
+
+    for t, s, m in gpipe_grid(n_stages, n_micro):
+        ins = [_resolve(r, flat_args_per_mb[m], outs[m])
+               for r in stages[s].in_refs]
+        dev = getattr(stages[s], "device", None)
+        if dev is not None:
+            ins = [put(x, dev, t, m) for x in ins]
+        run = getattr(stages[s], "jitted", None) or stages[s].fn
+        if tr.enabled and _traceable(ins):
+            with tr.span(f"{tick_phase(t, n_stages, n_micro)}:tick",
+                         lane=f"pipeline:stage{s}", tick=t, stage=s,
+                         micro=m):
                 outs[m][s] = run(*ins)
                 jax.block_until_ready(outs[m][s])
         else:
@@ -205,6 +299,7 @@ def gpipe_value_and_grad(stages: Sequence, loss_ref: tuple,
     for t, s, m in grid:
         ins = [_resolve(r, flat_args_per_mb[m], outs[m])
                for r in stages[s].in_refs]
+        ins = _stage_put(stages[s], ins, tick=t, micro=m)
         tr = obs.tracer()
         if tr.enabled and _traceable(ins):
             with tr.span(f"{tick_phase(t, n_stages, n_micro)}:fwd",

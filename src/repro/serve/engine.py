@@ -89,7 +89,8 @@ class ServeEngine:
                  paged: bool = False, kv_blocks: int | None = None,
                  kv_block_size: int = 16, prefill: str = "replay",
                  attn_kernel: bool = False,
-                 pim_compile: dict | None = None):
+                 pim_compile: dict | None = None,
+                 expand_scans: bool = False):
         """``backend="jit"`` jits the decode step; ``backend="pim"`` maps
         it onto the PIM hierarchy and decodes through the compiled
         schedule (``repro.mapper.compile``) — placed matmuls run as
@@ -107,7 +108,13 @@ class ServeEngine:
         ``partitions=K`` (pim backend only) compiles the decode step as K
         pipeline partition programs with explicit transfer points and
         decodes through them (token-identical to the unpartitioned
-        program: same equations, same order). ``microbatches`` sets the
+        program: same equations, same order). ``expand_scans=True``
+        expands the scanned layer stack into resident per-layer copies
+        first (``mapper.expand_graph``), so the K cut points can land
+        *inside* the stack — without it a deep decoder partitions into
+        one monolithic stage. When ``pim_compile`` carries ``devices``,
+        each stage is pinned to its own JAX device and decode runs
+        through the async chain (``PartitionedProgram.run_async``). ``microbatches`` sets the
         streaming depth of the modeled microbatch timeline exposed as
         ``self.pipeline_timeline`` (steady-state decode throughput of the
         partitioned plan — ``Schedule.pipeline``).
@@ -158,6 +165,7 @@ class ServeEngine:
             raise ValueError("pim_compile only applies to backend='pim'")
         self.prefill = prefill
         self.attn_kernel = attn_kernel
+        self.expand_scans = expand_scans
         self.prefill_batched_tokens = 0
         self._pim_compile = dict(pim_compile or {})
 
@@ -232,7 +240,8 @@ class ServeEngine:
             fn = self._decode_impl
         sched = mapper.build_schedule(
             fn, *args, tech=pim_tech,
-            partitions=partitions if partitions > 1 else None)
+            partitions=partitions if partitions > 1 else None,
+            expand_scans=self.expand_scans)
         if self.paged and self._kv_sites:
             # place the KV pool near its attention consumers and price
             # its per-tick block reads/writes into the schedule
@@ -258,7 +267,14 @@ class ServeEngine:
         else:
             self.pim_program = mapper.compile_schedule(
                 sched, use_cache=False, **self._pim_compile)
-        self._decode = self.pim_program
+        if getattr(self.pim_program, "stages", None) and any(
+                st.device is not None for st in self.pim_program.stages):
+            # device-pinned partitions: decode through the async chain so
+            # each stage runs on its own device queue (bit-identical
+            # tokens; the tick loop syncs when it reads the sampled ids)
+            self._decode = self.pim_program.run_async
+        else:
+            self._decode = self.pim_program
 
     # one batched decode tick
     def _decode_impl(self, params, cache, tokens, pos):

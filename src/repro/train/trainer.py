@@ -192,6 +192,12 @@ class Trainer:
             params, opt_state = optimizer.update(grads, opt_state, params)
             return params, opt_state, loss
 
+        if any(st.device is not None for st in prog.stages):
+            # device-pinned stages: keep the step eager so the GPipe
+            # driver's per-stage device_put routing actually happens —
+            # wrapping in jax.jit would trace the whole grid into one
+            # single-device program and erase the pinning
+            return step
         return jax.jit(step)
 
     def run(self) -> dict:

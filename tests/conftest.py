@@ -1,6 +1,10 @@
-"""Test config. NOTE: no XLA device-count forcing here — smoke tests and
-benches must see the single real CPU device. Multi-device tests spawn
-subprocesses with their own XLA_FLAGS (tests/helpers.py)."""
+"""Test config. NOTE: conftest itself forces no XLA device count — the
+suite runs correctly on one real CPU device. CI additionally exports
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the
+multi-device paths (device-pinned pipeline stages, in-process psum)
+exercise real per-device queues; tests that *require* N devices either
+detect them in-process or spawn a subprocess with its own XLA_FLAGS
+(tests/helpers.py) — never skip."""
 
 import numpy as np
 import pytest

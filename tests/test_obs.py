@@ -1,11 +1,10 @@
 """Observability: tracer/metrics primitives, Chrome-trace export and
 validation, drift reports on the llama3-8b smoke schedules (train step
-and paged serve), the placed_calls deprecation, and the zero-cost
-contract when disabled (no retraces, <5% wall overhead)."""
+and paged serve), and the zero-cost contract when disabled (no
+retraces, <5% wall overhead)."""
 
 import json
 import time
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -243,27 +242,6 @@ def test_drift_report_requires_pim_backend(llama):
                       kv_block_size=4)
     with pytest.raises(ValueError, match="backend='pim'"):
         eng.drift_report()
-
-
-# ---------------------------------------------------------------------------
-# placed_calls deprecation
-# ---------------------------------------------------------------------------
-
-
-def test_placed_calls_alias_deprecated():
-    sched = mapper.build_schedule(lambda x, w: x @ w,
-                                  jax.ShapeDtypeStruct((8, 16), jnp.float32),
-                                  jax.ShapeDtypeStruct((16, 8), jnp.float32))
-    prog = mapper.compile_schedule(sched, use_cache=False)
-    ex = mapper.ScheduleExecutor(sched)
-    ex.run(jnp.ones((8, 16)), jnp.ones((16, 8)))
-    for obj in (prog, ex, prog.ctx):
-        with warnings.catch_warnings(record=True) as caught:
-            warnings.simplefilter("always")
-            val = obj.placed_calls
-        assert val == obj.placed_blocks
-        assert any(issubclass(w.category, DeprecationWarning)
-                   for w in caught), type(obj).__name__
 
 
 # ---------------------------------------------------------------------------

@@ -186,5 +186,31 @@ print("COMPRESSED_PSUM_OK", rel)
 
 
 def test_compressed_psum_multidevice():
+    """Runs in-process when the session already has >= 8 devices (CI
+    exports ``XLA_FLAGS=--xla_force_host_platform_device_count=8``);
+    otherwise forces them in a subprocess — never skipped either way."""
+    import jax
+
+    if len(jax.devices()) >= 8:
+        import jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+
+        from repro.optim import compressed_psum
+        from repro.parallel._compat import shard_map
+
+        mesh = jax.make_mesh((8,), ("data",))
+        g_global = jax.random.normal(jax.random.PRNGKey(0), (8, 128))
+
+        def f(g):
+            red, err = compressed_psum({"g": g[0]}, "data", None)
+            return red["g"][None], err["g"][None]
+
+        red, err = jax.jit(shard_map(f, mesh=mesh, in_specs=P("data"),
+                                     out_specs=(P("data"), P("data"))))(
+                                         g_global)
+        want = jnp.mean(g_global, axis=0)
+        rel = float(jnp.abs(red[0] - want).max() / jnp.abs(want).max())
+        assert rel < 0.02, rel      # int8 quantization error bound
+        return
     res = run_with_devices(_COMPRESSED_PSUM, n_devices=8, timeout=300)
     assert "COMPRESSED_PSUM_OK" in res.stdout, res.stdout + res.stderr
