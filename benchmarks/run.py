@@ -28,6 +28,7 @@ MODULES = (
     "fusion_bench",
     "pipeline_bench",
     "serve_bench",
+    "quant_bench",
 )
 
 

@@ -41,6 +41,10 @@ GATES = {
         "paged_router_2": ["speedup_vs_contiguous_1", "ttft_p50_s",
                            "ttft_p95_s", "tpot_p50_s", "tpot_p95_s"],
     },
+    "BENCH_quant": {
+        "llama3_8b_smoke": ["replica_ratio_int8", "latency_ratio_int8",
+                            "max_layer_error_int8", "tokens_per_s_int8"],
+    },
 }
 
 

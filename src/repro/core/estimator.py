@@ -227,14 +227,21 @@ class PIMReport:
 
 def pim_estimate(counts: OpCounts, tech: str = "proposed",
                  weight_bits: int | None = None,
-                 parallel_units: int | None = None) -> PIMReport:
+                 parallel_units: int | None = None,
+                 t_mac_s: float | None = None,
+                 e_mac_j: float | None = None) -> PIMReport:
     """Price an op-count bag on a PIM design.
 
     ``parallel_units``: concurrent PIM MAC lanes provisioned (default: one
     1024-lane subarray group per 2^20 weight bits, FloatPIM's layout).
+    ``t_mac_s`` / ``e_mac_j`` override the per-MAC cost — reduced-precision
+    weight datapaths (``mapper.make_subarray(weight_dtype=...)``) run
+    shorter bit-serial MAC schedules than the default fp32 closed form.
     """
     accel = acc_mod.PIMAccelerator(tech)
     mac = accel.mac
+    mac_t = mac.t_mac_s if t_mac_s is None else t_mac_s
+    mac_e = mac.e_mac_j if e_mac_j is None else e_mac_j
     ops = None
     if weight_bits is None:
         weight_bits = 1 << 20
@@ -254,11 +261,11 @@ def pim_estimate(counts: OpCounts, tech: str = "proposed",
         t_add, e_add = cost_mod.proposed_fp_add_cost(dev)
         t_mul, e_mul = cost_mod.proposed_fp_mul_cost(dev)
     counts_macs = counts.macs
-    energy = (counts_macs * mac.e_mac_j + counts.adds * e_add
+    energy = (counts_macs * mac_e + counts.adds * e_add
               + counts.muls * e_mul)
     serial_macs = math.ceil(counts_macs / parallel_units)
     serial_elem = math.ceil((counts.adds + counts.muls) / parallel_units)
-    latency = serial_macs * mac.t_mac_s + serial_elem * max(t_add, t_mul)
+    latency = serial_macs * mac_t + serial_elem * max(t_add, t_mul)
     area = (n_sub * acc_mod.SUBARRAY_ROWS * acc_mod.SUBARRAY_COLS
             * accel.cell_area * (1 + accel.periph_factor))
     return PIMReport(tech=tech, macs=counts_macs, adds=counts.adds,

@@ -1,0 +1,333 @@
+"""Reduced-precision weight quantization for the PIM datapath.
+
+The paper's §3.3 bit-serial arithmetic makes precision a *choice*: a MAC
+over an ``nm``-bit mantissa / ``ne``-bit exponent value costs fewer
+in-array cycles, and a stored value occupies ``n_bits`` cells along a
+subarray row — so fewer bits per weight means both a shorter MAC and more
+weight columns per subarray (density the placer can spend on replication;
+see the related SOT-MRAM compressed-DNN engine, arXiv 1912.05416).
+
+This module is the single numerics home for that trade:
+
+  * a **dtype registry** (``spec``) mapping names to ``(n_bits, nm, ne)``
+    grids: ``fp32``, ``fp16``, ``int8`` (7 magnitude bits, ``ne=0``) and
+    the block-scaled fp8-style grids ``fp8_e4m3`` / ``fp8_e5m2``;
+  * **grid rounding** (``round_to_grid``) — round-to-nearest-even onto an
+    (nm, ne) float grid built from ``core/fp.py``'s bit-plane machinery
+    (``u32_to_bits`` planes, the ripple ``pim_inc_at`` increment, the same
+    ``_round_rne`` decision the §3.3 adder uses), with FTZ and
+    saturate-to-max-finite — i.e. exactly what the in-array reduced-width
+    datapath computes;
+  * **blockwise pack/unpack** (``quantize_blockwise`` /
+    ``dequantize_blockwise``) — 1-D absmax block scales; the int8 path is
+    the one implementation behind ``optim.compression``'s gradient
+    compressor, and the float paths pack sign|exp|mant integer codes
+    (``encode_float`` / ``decode_float``);
+  * **axis-wise fake-quant** for the weight-stationary datapath
+    (``quantize_axis`` / ``quantize_ste`` / ``fake_quant``): per-column
+    scales at placement-block granularity, with a straight-through
+    custom VJP so training keeps fp32 gradient flow (``dw = dq / scale``);
+  * the **golden fp32 reference + declared error budgets**:
+    ``fake_quant`` is the golden model of what the array stores,
+    ``error_bound`` the per-element bound, ``layer_error`` /
+    ``layer_error_budget`` the per-layer (relative-to-block-max) metric
+    CI gates on.
+
+Round-trip accuracy is property-tested against the golden model in
+``tests/test_quant.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fp
+
+# 1-D blockwise quantization granularity (gradient compression block).
+BLOCK = 256
+
+# Scale floor: keeps all-zero blocks well-defined (q = 0, exact).
+SCALE_FLOOR = 1e-20
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """One storage grid: ``n_bits`` cells/value, (nm, ne) bit-serial shape."""
+
+    name: str
+    n_bits: int        # cells per stored value (row footprint)
+    n_mant: int        # nm — mantissa bits (int grids: magnitude bits)
+    n_exp: int         # ne — exponent bits; 0 => fixed-point integer grid
+
+    @property
+    def kind(self) -> str:
+        return "int" if self.n_exp == 0 else "float"
+
+    @property
+    def bias(self) -> int:
+        return (1 << (self.n_exp - 1)) - 1
+
+    @property
+    def emax(self) -> int:
+        """Largest unbiased exponent (no inf/nan codes — we saturate)."""
+        return (1 << self.n_exp) - 1 - self.bias
+
+    @property
+    def emin(self) -> int:
+        """Smallest normal unbiased exponent (below it: flush to zero)."""
+        return 1 - self.bias
+
+    @property
+    def qmax(self) -> float:
+        """Largest representable magnitude on the grid."""
+        if self.kind == "int":
+            return float((1 << self.n_mant) - 1)
+        return (2.0 - 2.0 ** (-self.n_mant)) * 2.0 ** self.emax
+
+    @property
+    def inv_qmax(self) -> float:
+        """f32 reciprocal of ``qmax``, precomputed so scale math is a
+        multiply: XLA strength-reduces division by a constant to a
+        reciprocal multiply under jit, which would make jitted scales
+        differ from eager ones by 1 ulp and break grouped-vs-oracle
+        bit-identity."""
+        return float(np.float32(1.0) / np.float32(self.qmax))
+
+
+DTYPES = {
+    "fp32": QuantSpec("fp32", 32, 23, 8),
+    "fp16": QuantSpec("fp16", 16, 10, 5),
+    "int8": QuantSpec("int8", 8, 7, 0),
+    "fp8_e4m3": QuantSpec("fp8_e4m3", 8, 3, 4),
+    "fp8_e5m2": QuantSpec("fp8_e5m2", 8, 2, 5),
+}
+_ALIASES = {"fp8": "fp8_e4m3"}
+
+
+def spec(dtype: str | QuantSpec) -> QuantSpec:
+    """Resolve a dtype name (or pass a spec through)."""
+    if isinstance(dtype, QuantSpec):
+        return dtype
+    s = DTYPES.get(_ALIASES.get(dtype, dtype))
+    if s is None:
+        raise ValueError(f"unknown weight dtype {dtype!r}; known: "
+                         f"{sorted(DTYPES) + sorted(_ALIASES)}")
+    return s
+
+
+def dtype_names() -> list[str]:
+    return sorted(DTYPES) + sorted(_ALIASES)
+
+
+# ---------------------------------------------------------------------------
+# grid rounding (bit-plane RNE onto an (nm, ne) float grid)
+# ---------------------------------------------------------------------------
+
+
+def round_to_grid(x: jnp.ndarray, dtype: str | QuantSpec) -> jnp.ndarray:
+    """Round f32 values to the dtype's grid (values stay f32).
+
+    Float grids: IEEE-style RNE on the top ``nm`` mantissa bits via the
+    bit-plane ripple increment, exponent clamped to [emin, emax] with
+    flush-to-zero below and saturate-to-max-finite above (no inf/nan
+    codes; f32 NaN/Inf inputs propagate unchanged). Int grids:
+    round-to-nearest-even then clip to ±qmax.
+    """
+    s = spec(dtype)
+    x = jnp.asarray(x, jnp.float32)
+    if s.name == "fp32":
+        return x
+    if s.kind == "int":
+        return jnp.clip(jnp.round(x), -s.qmax, s.qmax)
+
+    _, sign, exp, mant = fp.unpack_f32(x)
+    drop = fp.N_MANT - s.n_mant
+    mbits = fp.u32_to_bits(mant, fp.N_MANT)
+    keep = mbits[..., drop:]
+    guard = mbits[..., drop - 1]
+    if drop > 1:
+        sticky = jnp.max(mbits[..., : drop - 1], axis=-1)
+    else:
+        sticky = jnp.zeros_like(guard)
+    inc = fp._round_rne(keep[..., 0], guard, jnp.zeros_like(guard), sticky)
+    keep_r, carry = fp.pim_inc_at(keep, inc)
+    exp_r = exp + carry                      # 1.11..1 + ulp -> 10.00..0
+    mant_r = (fp.bits_to_u32(keep_r) << jnp.uint32(drop)).astype(jnp.int32)
+
+    e_unb = exp_r - fp.BIAS
+    out = fp.pack_f32(sign, exp_r, mant_r)
+    max_val = jnp.float32(s.qmax)
+    signed_max = jnp.where(sign == 1, -max_val, max_val)
+    out = jnp.where(e_unb > s.emax, signed_max, out)
+    # FTZ: f32 zeros/subnormals and anything below the grid's normal range.
+    out = jnp.where((exp == 0) | (e_unb < s.emin), jnp.float32(0.0), out)
+    return jnp.where(exp == 255, x, out)     # NaN/Inf propagate
+
+
+def encode_float(v: jnp.ndarray, dtype: str | QuantSpec) -> jnp.ndarray:
+    """On-grid f32 values -> packed ``sign|exp|mant`` integer codes."""
+    s = spec(dtype)
+    _, sign, exp, mant = fp.unpack_f32(jnp.asarray(v, jnp.float32))
+    e_t = exp - fp.BIAS + s.bias
+    m_t = mant >> (fp.N_MANT - s.n_mant)
+    zero = exp == 0
+    e_t = jnp.where(zero, 0, e_t)
+    m_t = jnp.where(zero, 0, m_t)
+    code = (sign << (s.n_exp + s.n_mant)) | (e_t << s.n_mant) | m_t
+    ctype = jnp.uint8 if s.n_bits <= 8 else jnp.uint16
+    return code.astype(ctype)
+
+
+def decode_float(code: jnp.ndarray, dtype: str | QuantSpec) -> jnp.ndarray:
+    """Packed integer codes -> f32 values (exact inverse of encode_float)."""
+    s = spec(dtype)
+    c = code.astype(jnp.int32)
+    sign = (c >> (s.n_exp + s.n_mant)) & 1
+    e_t = (c >> s.n_mant) & ((1 << s.n_exp) - 1)
+    m_t = c & ((1 << s.n_mant) - 1)
+    out = fp.pack_f32(sign, e_t - s.bias + fp.BIAS,
+                      m_t << (fp.N_MANT - s.n_mant))
+    return jnp.where(e_t == 0, jnp.float32(0.0), out)
+
+
+# ---------------------------------------------------------------------------
+# blockwise 1-D pack/unpack (absmax block scales)
+# ---------------------------------------------------------------------------
+
+
+def quantize_blockwise(x: jnp.ndarray, dtype: str | QuantSpec = "int8",
+                       block: int = BLOCK):
+    """-> (q codes [nblocks, block], scale f32 [nblocks, 1]).
+
+    ``x`` is flattened and zero-padded to a block multiple; each block's
+    scale is ``max(absmax / qmax, SCALE_FLOOR)``. Int grids return int8
+    codes, float grids packed sign|exp|mant codes (``decode_float``).
+    """
+    s = spec(dtype)
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.maximum(
+        jnp.max(jnp.abs(blocks), axis=1, keepdims=True) * s.inv_qmax,
+        SCALE_FLOOR)
+    v = round_to_grid(blocks / scale, s)
+    if s.kind == "int":
+        return v.astype(jnp.int8), scale
+    return encode_float(v, s), scale
+
+
+def dequantize_blockwise(q: jnp.ndarray, scale: jnp.ndarray,
+                         like: jnp.ndarray,
+                         dtype: str | QuantSpec = "int8") -> jnp.ndarray:
+    """Inverse of quantize_blockwise, truncated/reshaped to ``like``."""
+    s = spec(dtype)
+    v = q.astype(jnp.float32) if s.kind == "int" else decode_float(q, s)
+    flat = (v * scale).reshape(-1)
+    return flat[: like.size].reshape(like.shape)
+
+
+# ---------------------------------------------------------------------------
+# axis-wise fake-quant for the weight-stationary datapath
+# ---------------------------------------------------------------------------
+
+
+def quantize_axis(w: jnp.ndarray, dtype: str | QuantSpec, axis: int = -2):
+    """Split ``w ~= q * scale`` with absmax scales reduced over ``axis``.
+
+    For a (K, N) weight block, ``axis=-2`` gives one scale per output
+    column — the scale rides the block's peripheral register while the
+    ``q`` values sit in the array at ``n_bits`` cells each.
+    Returns ``(q, scale)`` with ``q`` the on-grid values in f32.
+    """
+    s = spec(dtype)
+    w = jnp.asarray(w, jnp.float32)
+    amax = jnp.max(jnp.abs(w), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax * s.inv_qmax, SCALE_FLOOR)
+    return round_to_grid(w / scale, s), scale
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def quantize_ste(w: jnp.ndarray, dtype: str, axis: int = -2):
+    """quantize_axis with a straight-through gradient: ``dw = dq / scale``.
+
+    Composed with a kernel whose weight cotangent is ``dq = (a^T g) *
+    scale``, the weight gradient is ``a^T g`` — fp32 gradient flow, so
+    training under quantized storage keeps full-precision updates.
+    """
+    return quantize_axis(w, dtype, axis)
+
+
+def _quantize_ste_fwd(w, dtype, axis):
+    q, scale = quantize_axis(w, dtype, axis)
+    return (q, scale), scale
+
+
+def _quantize_ste_bwd(dtype, axis, scale, ct):
+    dq, _ = ct                               # scale cotangent dropped (STE)
+    return (dq / scale,)
+
+
+quantize_ste.defvjp(_quantize_ste_fwd, _quantize_ste_bwd)
+
+
+def fake_quant(w: jnp.ndarray, dtype: str | QuantSpec,
+               axis: int = -2) -> jnp.ndarray:
+    """Golden fp32 reference: what the array stores, dequantized."""
+    if spec(dtype).name == "fp32":
+        return jnp.asarray(w, jnp.float32)
+    q, scale = quantize_axis(w, dtype, axis)
+    return q * scale
+
+
+# ---------------------------------------------------------------------------
+# declared error budgets (the golden-model contract CI gates on)
+# ---------------------------------------------------------------------------
+
+
+def error_bound(x: jnp.ndarray, dtype: str | QuantSpec,
+                scale: jnp.ndarray) -> jnp.ndarray:
+    """Per-element upper bound on ``|fake_quant(x) - x|`` given the scale.
+
+    Int grids: half a quantization step. Float grids: RNE relative error
+    (``2^-nm``, 2x slack over the tight ``2^-(nm+1)``) plus the FTZ
+    absolute floor (``scale * 2^emin``).
+    """
+    s = spec(dtype)
+    x = jnp.asarray(x, jnp.float32)
+    if s.name == "fp32":
+        return jnp.zeros_like(x)
+    if s.kind == "int":
+        return jnp.broadcast_to(0.5 * scale, x.shape).astype(jnp.float32)
+    return jnp.abs(x) * 2.0 ** (-s.n_mant) + scale * 2.0 ** s.emin
+
+
+def layer_error_budget(dtype: str | QuantSpec) -> float:
+    """Declared max per-layer error, relative to each block's absmax."""
+    s = spec(dtype)
+    if s.name == "fp32":
+        return 0.0
+    if s.kind == "int":
+        return 0.5 / s.qmax
+    return 2.0 ** (-s.n_mant) + 2.0 ** s.emin / s.qmax
+
+
+def layer_error(w: jnp.ndarray, dtype: str | QuantSpec,
+                axis: int = -2) -> jnp.ndarray:
+    """Measured per-layer error: max over blocks of
+    ``max|fake_quant - w| / blockmax`` — comparable to
+    ``layer_error_budget`` (scalar, 0 for fp32)."""
+    s = spec(dtype)
+    w = jnp.asarray(w, jnp.float32)
+    if s.name == "fp32":
+        return jnp.float32(0.0)
+    q, scale = quantize_axis(w, s, axis)
+    err = jnp.abs(q * scale - w)
+    amax = jnp.max(jnp.abs(w), axis=axis, keepdims=True)
+    denom = jnp.maximum(amax, s.qmax * SCALE_FLOOR)
+    return jnp.max(err / denom)

@@ -23,8 +23,9 @@ from repro.kernels.flash_attention import (flash_attention,
                                            paged_decode_attention_grouped)
 from repro.kernels.pim_fp import pim_fp32_mul
 from repro.kernels.pim_mac import (pim_mac, pim_mac_grouped, pim_matmul,
-                                   pim_matmul_grouped)
+                                   pim_matmul_grouped,
+                                   pim_matmul_grouped_q)
 
 __all__ = ["ops", "ref", "flash_attention", "paged_decode_attention_grouped",
            "pim_fp32_mul", "pim_mac", "pim_mac_grouped", "pim_matmul",
-           "pim_matmul_grouped"]
+           "pim_matmul_grouped", "pim_matmul_grouped_q"]

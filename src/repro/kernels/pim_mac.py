@@ -339,3 +339,114 @@ def pim_matmul_grouped(a: jnp.ndarray, b: jnp.ndarray, *, bm: int = 128,
     to a standalone ``pim_matmul`` on the same padded operands, so
     grouped results are bit-identical to the per-block path."""
     return _pim_matmul_grouped_vjp(a, b, bm, bn, bk, interpret, col_groups)
+
+
+# ---------------------------------------------------------------------------
+# quantized grouped matmul: dequantize-on-load from n-bit stored weights
+# ---------------------------------------------------------------------------
+
+
+def _matmul_grouped_q_kernel(a_ref, q_ref, s_ref, o_ref, acc_ref, *,
+                             n_k: int):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # dequantize-on-load: the stored block holds grid codes q, the
+    # per-(group, column) scale rides the peripheral register; the MAC
+    # datapath sees q * s and accumulates in f32 as always.
+    acc_ref[...] += jnp.dot(a_ref[0], q_ref[0] * s_ref[0],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(ik == n_k - 1)
+    def _done():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _matmul_grouped_q_call(a, q, s, bm: int, bn: int, bk: int,
+                           interpret: bool, col_groups: int) -> jnp.ndarray:
+    ga, m, k = a.shape
+    g, k2, n = q.shape
+    assert g == ga * col_groups and k == k2, (a.shape, q.shape, col_groups)
+    assert s.shape == (g, 1, n), (s.shape, q.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k)
+    n_k = k // bk
+    return pl.pallas_call(
+        functools.partial(_matmul_grouped_q_kernel, n_k=n_k),
+        grid=(g, m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bm, bk),
+                         lambda gg, i, j, kk, cg=col_groups:
+                         (gg // cg, i, kk)),
+            pl.BlockSpec((1, bk, bn), lambda gg, i, j, kk: (gg, kk, j)),
+            # one scale row per group, tiled along N with the B block
+            pl.BlockSpec((1, 1, bn), lambda gg, i, j, kk: (gg, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda gg, i, j, kk: (gg, i, j)),
+        out_shape=jax.ShapeDtypeStruct((g, m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(a, q, s)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _pim_matmul_grouped_q_vjp(a, q, s, bm, bn, bk, interpret, col_groups):
+    return _matmul_grouped_q_call(a, q, s, bm, bn, bk, interpret,
+                                  col_groups)
+
+
+def _pim_matmul_grouped_q_fwd(a, q, s, bm, bn, bk, interpret, col_groups):
+    return (_matmul_grouped_q_call(a, q, s, bm, bn, bk, interpret,
+                                   col_groups),
+            (a, q, s))
+
+
+def _pim_matmul_grouped_q_bwd(bm, bn, bk, interpret, col_groups, res, g):
+    # fp32-accumulating backward: dA runs against the *dequantized*
+    # weights (q * s, formed once outside the launch), and the stored-code
+    # cotangent is dq = (A^T g) * s — both grouped fp32 launches, so grad
+    # flow keeps full precision and composes with quantize_ste's
+    # straight-through dw = dq / s into exactly dW = A^T g. Scales are
+    # placement constants: ds = 0.
+    a, q, s = res
+    b = q * s
+    da = _pim_matmul_grouped_vjp(g, jnp.swapaxes(b, 1, 2), bm, bk, bn,
+                                 interpret, 1)
+    if col_groups > 1:
+        da = da.reshape(a.shape[0], col_groups, *da.shape[1:]).sum(axis=1)
+    dq = _pim_matmul_grouped_vjp(jnp.swapaxes(a, 1, 2), g, bk, bn, bm,
+                                 interpret, col_groups) * s
+    return da.astype(a.dtype), dq.astype(q.dtype), jnp.zeros_like(s)
+
+
+_pim_matmul_grouped_q_vjp.defvjp(_pim_matmul_grouped_q_fwd,
+                                 _pim_matmul_grouped_q_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret",
+                                             "col_groups"))
+def pim_matmul_grouped_q(a: jnp.ndarray, q: jnp.ndarray, s: jnp.ndarray, *,
+                         bm: int = 128, bn: int = 128, bk: int = 128,
+                         interpret: bool = True,
+                         col_groups: int = 1) -> jnp.ndarray:
+    """``pim_matmul_grouped`` over quantized stored weights:
+    ``C[g] = A[g // col_groups] @ (Q[g] * S[g])`` in one launch.
+
+    ``Q`` holds each placed block's on-grid weight values (f32-carried
+    codes from ``core.quant.quantize_axis`` — int8 / fp8-style grids) and
+    ``S`` is the per-(group, output-column) scale, shape ``(G, 1, N)``:
+    the scale lives in the block's peripheral register and is applied on
+    load inside the kernel, mirroring a subarray that stores ``n_bits``
+    cells per weight and rescales on the shared column periphery.
+    Per-tile math is ``dot(a, q * s)`` — elementwise dequantize then the
+    same f32 accumulation order as ``pim_matmul_grouped`` on ``q * s``,
+    so results are bit-identical to the per-block oracle running on
+    pre-dequantized blocks. Differentiable: see
+    ``_pim_matmul_grouped_q_bwd``."""
+    return _pim_matmul_grouped_q_vjp(a, q, s, bm, bn, bk, interpret,
+                                     col_groups)

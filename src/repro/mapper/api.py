@@ -43,6 +43,7 @@ def map_arch(name: str, kind: str = "train", *, seq_len: int = 128,
              hierarchy: PIMHierarchy | None = None,
              policy: placement_mod.PlacementPolicy | None = None,
              tech: str = "proposed",
+             weight_dtype: str = "fp32",
              partitions: int | None = None,
              expand_scans: bool = False,
              expand_budget: int | None = None) -> schedule_mod.Schedule:
@@ -56,6 +57,10 @@ def map_arch(name: str, kind: str = "train", *, seq_len: int = 128,
     ``expand_scans=True`` first expands the scanned layer stack into
     resident per-layer copies (capacity-bucketed against
     ``expand_budget`` subarrays) so cuts can land inside it.
+    ``weight_dtype`` stores weights on a reduced-precision grid
+    (``"int8"`` / ``"fp8_e4m3"`` / ``"fp8_e5m2"`` / ``"fp16"``) and
+    spends the freed subarrays on replicas (see
+    ``build_schedule``).
     """
     from repro.launch import steps as steps_mod
 
@@ -73,6 +78,7 @@ def map_arch(name: str, kind: str = "train", *, seq_len: int = 128,
         return schedule_mod.build_schedule(
             step, p_shapes, o_shapes, b_shapes,
             hierarchy=hierarchy, policy=policy, tech=tech,
+            weight_dtype=weight_dtype,
             partitions=partitions, expand_scans=expand_scans,
             expand_budget=expand_budget)
     if kind == "serve":
@@ -82,6 +88,7 @@ def map_arch(name: str, kind: str = "train", *, seq_len: int = 128,
         return schedule_mod.build_schedule(
             step, p_shapes, c_shapes, token, pos,
             hierarchy=hierarchy, policy=policy, tech=tech,
+            weight_dtype=weight_dtype,
             partitions=partitions, expand_scans=expand_scans,
             expand_budget=expand_budget)
     raise ValueError(f"kind must be 'train' or 'serve', got {kind!r}")
@@ -91,6 +98,7 @@ def map_lenet(kind: str = "serve", *, batch: int = 4, lr: float = 0.05,
               hierarchy: PIMHierarchy | None = None,
               policy: placement_mod.PlacementPolicy | None = None,
               tech: str = "proposed",
+              weight_dtype: str = "fp32",
               partitions: int | None = None,
               expand_scans: bool = False) -> schedule_mod.Schedule:
     """Map the paper's LeNet: ``serve`` = forward pass, ``train`` = one
@@ -107,6 +115,7 @@ def map_lenet(kind: str = "serve", *, batch: int = 4, lr: float = 0.05,
         return schedule_mod.build_schedule(
             lenet.lenet_apply, _abstract(params), images,
             hierarchy=hierarchy, policy=policy, tech=tech,
+            weight_dtype=weight_dtype,
             partitions=partitions, expand_scans=expand_scans)
     if kind == "train":
         labels = jax.ShapeDtypeStruct((batch,), jnp.int32)
@@ -120,6 +129,7 @@ def map_lenet(kind: str = "serve", *, batch: int = 4, lr: float = 0.05,
         return schedule_mod.build_schedule(
             train_step, _abstract(params), images, labels,
             hierarchy=hierarchy, policy=policy, tech=tech,
+            weight_dtype=weight_dtype,
             partitions=partitions, expand_scans=expand_scans)
     raise ValueError(f"kind must be 'train' or 'serve', got {kind!r}")
 
@@ -128,7 +138,8 @@ def compile_arch(name: str, kind: str = "train", *, seq_len: int = 128,
                  batch: int = 1, smoke: bool = False,
                  hierarchy: PIMHierarchy | None = None,
                  policy: placement_mod.PlacementPolicy | None = None,
-                 tech: str = "proposed", block: int = 128,
+                 tech: str = "proposed", weight_dtype: str = "fp32",
+                 block: int = 128,
                  interpret: bool = True, partitions: int | None = None,
                  expand_scans: bool = False, devices=None):
     """Map one architecture's step and compile it to a jittable program
@@ -137,6 +148,7 @@ def compile_arch(name: str, kind: str = "train", *, seq_len: int = 128,
     async pipeline driver)."""
     sched = map_arch(name, kind, seq_len=seq_len, batch=batch, smoke=smoke,
                      hierarchy=hierarchy, policy=policy, tech=tech,
+                     weight_dtype=weight_dtype,
                      partitions=partitions, expand_scans=expand_scans)
     if partitions:
         return compile_mod.compile_partitioned(sched, block=block,
@@ -149,14 +161,16 @@ def compile_arch(name: str, kind: str = "train", *, seq_len: int = 128,
 def compile_lenet(kind: str = "serve", *, batch: int = 4, lr: float = 0.05,
                   hierarchy: PIMHierarchy | None = None,
                   policy: placement_mod.PlacementPolicy | None = None,
-                  tech: str = "proposed", block: int = 128,
+                  tech: str = "proposed", weight_dtype: str = "fp32",
+                  block: int = 128,
                   interpret: bool = True, partitions: int | None = None,
                   devices=None):
     """Map the paper's LeNet and compile it to a jittable program
     (a ``PartitionedProgram`` of K stage programs when ``partitions=K``;
     ``devices`` pins stages for the async pipeline driver)."""
     sched = map_lenet(kind, batch=batch, lr=lr, hierarchy=hierarchy,
-                      policy=policy, tech=tech, partitions=partitions)
+                      policy=policy, tech=tech, weight_dtype=weight_dtype,
+                      partitions=partitions)
     if partitions:
         return compile_mod.compile_partitioned(sched, block=block,
                                                interpret=interpret,

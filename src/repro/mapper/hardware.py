@@ -46,6 +46,7 @@ import math
 from repro.core import accelerator as acc_mod
 from repro.core import cell as cell_mod
 from repro.core import cost as cost_mod
+from repro.core import quant as quant_mod
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,7 +55,8 @@ class SubarraySpec:
 
     rows: int = acc_mod.SUBARRAY_ROWS
     cols: int = acc_mod.SUBARRAY_COLS
-    n_bits: int = 32                     # cells per stored value
+    n_bits: int = 32                     # cells per stored weight value
+    weight_dtype: str = "fp32"           # storage grid (core.quant registry)
     workspace_rows: int = acc_mod.WORKSPACE_PROPOSED
     # rolled-up op costs (filled in by make_subarray)
     t_mac_s: float = 0.0
@@ -67,6 +69,13 @@ class SubarraySpec:
     e_write_bit_j: float = 0.0
     cell_area_m2: float = 0.0
     periph_factor: float = 0.35
+
+    def __post_init__(self):
+        if self.n_bits <= 0 or self.cols % self.n_bits:
+            raise ValueError(
+                f"subarray cols ({self.cols}) must divide evenly into "
+                f"{self.n_bits}-bit weight slots — a silent floor would "
+                f"mis-price capacity")
 
     @property
     def weight_rows(self) -> int:
@@ -93,17 +102,53 @@ class SubarraySpec:
                 * (1.0 + self.periph_factor))
 
 
-def make_subarray(tech: str = "proposed") -> SubarraySpec:
-    """Roll §3.3 cell costs up into one subarray's cost terms."""
+def _mac_cost_at(tech: str, nm: int, ne: int) -> cost_mod.MacCost:
+    """§3.3 closed-form MAC cost at an (nm, ne) bit-serial width."""
+    if tech == "proposed":
+        return cost_mod.proposed_mac_cost(cell_mod.derive_sot_mram_costs(),
+                                          nm, ne)
+    if tech == "ultrafast":
+        return cost_mod.ultrafast_mac_cost(nm, ne)
+    if tech == "floatpim":
+        return cost_mod.floatpim_mac_cost(cost_mod.FloatPIMParams(), nm, ne)
+    raise ValueError(tech)
+
+
+def make_subarray(tech: str = "proposed", weight_dtype: str = "fp32", *,
+                  n_bits: int | None = None,
+                  workspace_rows: int | None = None) -> SubarraySpec:
+    """Roll §3.3 cell costs up into one subarray's cost terms.
+
+    ``weight_dtype`` selects the stored-weight grid from the
+    ``core.quant`` registry: it sets ``n_bits`` (cells per value, hence
+    ``weight_cols``) and re-derives the weight-side MAC latency/energy at
+    the dtype's (nm, ne) bit-serial width — shorter mantissas mean fewer
+    ripple cycles (the §3.3 closed forms are width-parameterized).
+    Activations and eltwise peripherals stay fp32, so ``t_add_s`` /
+    ``t_mul_s`` keep their fp32 values. ``n_bits`` / ``workspace_rows``
+    override the dtype's storage footprint / the per-tech workspace
+    reserve when given.
+    """
     accel = acc_mod.PIMAccelerator(tech)
-    mac = accel.mac
+    qs = quant_mod.spec(weight_dtype)
+    bits = qs.n_bits if n_bits is None else n_bits
+    if qs.name == "fp32":
+        mac = accel.mac                  # bit-identical to the legacy path
+    else:
+        # int grids (ne=0) run the mantissa datapath only; the closed
+        # forms accept ne=0 directly.
+        mac = _mac_cost_at(tech, qs.n_mant, qs.n_exp)
     workspace = (acc_mod.WORKSPACE_FLOATPIM if tech == "floatpim"
                  else acc_mod.WORKSPACE_PROPOSED)
+    if workspace_rows is not None:
+        workspace = workspace_rows
     return SubarraySpec(
+        n_bits=bits,
+        weight_dtype=qs.name,
         workspace_rows=workspace,
         t_mac_s=mac.t_mac_s, e_mac_j=mac.e_mac_j,
-        t_add_s=mac.t_add_s, e_add_j=mac.e_add_j,
-        t_mul_s=mac.t_mul_s, e_mul_j=mac.e_mul_j,
+        t_add_s=accel.mac.t_add_s, e_add_j=accel.mac.e_add_j,
+        t_mul_s=accel.mac.t_mul_s, e_mul_j=accel.mac.e_mul_j,
         t_write_bit_s=accel.t_write_bit, e_write_bit_j=accel.e_write_bit,
         cell_area_m2=accel.cell_area,
         periph_factor=accel.periph_factor,
@@ -341,10 +386,15 @@ class PIMHierarchy:
         return n_subarrays * self.subarray.area_m2
 
 
-def default_hierarchy(tech: str = "proposed", **overrides) -> PIMHierarchy:
+def default_hierarchy(tech: str = "proposed", weight_dtype: str = "fp32",
+                      **overrides) -> PIMHierarchy:
     """The hierarchy used throughout unless a caller overrides knobs.
 
-    ``overrides`` may replace ``tile`` / ``chip`` specs or scalar knobs of
-    ``PIMHierarchy`` (e.g. ``tile=TileSpec(subarrays=32)``).
+    ``weight_dtype`` selects the stored-weight precision (see
+    ``make_subarray``); ``overrides`` may replace ``tile`` / ``chip``
+    specs or scalar knobs of ``PIMHierarchy``
+    (e.g. ``tile=TileSpec(subarrays=32)``).
     """
-    return PIMHierarchy(tech=tech, subarray=make_subarray(tech), **overrides)
+    return PIMHierarchy(tech=tech,
+                        subarray=make_subarray(tech, weight_dtype),
+                        **overrides)

@@ -34,6 +34,15 @@ actual ``pallas_call`` dispatches — under the per-block oracle they are
 equal (plus eltwise); under grouped execution launches collapse to
 roughly one per placed node.
 
+When the schedule's subarray grid stores sub-fp32 weights
+(``weight_dtype`` of ``int8`` / ``fp8_e4m3`` / ``fp8_e5m2`` / ``fp16``),
+the stationary matmul operand is quantized blockwise per output column
+(``repro.core.quant.quantize_ste``) and the grouped launch dequantizes
+on load (``pim_matmul_grouped_q`` — scales ride as a per-(group, column)
+operand). Accumulation stays fp32, gradients flow straight-through, and
+the per-block oracle applies the identical quantize→dequantize to each
+padded block, so grouped and oracle modes remain bit-identical.
+
 Rules are keyed by the node kind from ``repro.core.estimator.NODE_KINDS``
 (the shared registry); a rule returns the lowered outputs or ``None`` to
 decline, in which case the equation falls back to ``primitive.bind`` —
@@ -69,9 +78,10 @@ import jax.numpy as jnp
 
 from repro import obs
 from repro.core import estimator
+from repro.core import quant
 from repro.core.estimator import CALL_PRIMS, inner_jaxpr
 from repro.kernels.pim_mac import (pim_mac, pim_mac_grouped, pim_matmul,
-                                   pim_matmul_grouped)
+                                   pim_matmul_grouped, pim_matmul_grouped_q)
 
 
 def _pad_to(x: jnp.ndarray, mults: tuple[int, int]) -> jnp.ndarray:
@@ -105,6 +115,7 @@ class LoweringContext:
     interpret: bool = True
     group: bool = True            # grouped launches (False = per-block)
     fuse: bool = True             # cross-equation coalescing
+    weight_dtype: str | None = None  # default: the schedule's subarray grid
     placed_blocks: int = 0
     eltwise_calls: int = 0
     matmul_launches: int = 0
@@ -114,6 +125,9 @@ class LoweringContext:
         self.node_by_eqn = {nd.eqn_id: nd
                             for nd in self.schedule.graph.nodes}
         self._subtree_cache: dict[int, bool] = {}
+        if self.weight_dtype is None:
+            self.weight_dtype = getattr(self.schedule.hierarchy.subarray,
+                                        "weight_dtype", "fp32")
 
     @property
     def kernel_launches(self) -> int:
@@ -192,6 +206,43 @@ def _grouped_reduce(out_g: jnp.ndarray, meta) -> jnp.ndarray:
     return jnp.swapaxes(col, 0, 1).reshape(m, C * w)[:, :n]
 
 
+def _observe_quant_error(ctx: LoweringContext, b_g, q, s) -> None:
+    """Record the launch's per-layer quantization error (max over columns
+    of |deq - w| relative to the column absmax) into the obs histogram.
+    Eager mode only — under jit tracing operands are Tracers and nothing
+    is recorded, so compiled programs stay byte-identical."""
+    if any(isinstance(x, jax.core.Tracer) for x in (b_g, q, s)):
+        return
+    qmax = quant.spec(ctx.weight_dtype).qmax
+    rel = float(jnp.max(jnp.abs(q * s - b_g) / (s * qmax)))
+    obs.metrics().histogram("pim.quant_layer_rel_error").observe(rel)
+
+
+def _launch_grouped(ctx: LoweringContext, a_g, b_g,
+                    col_groups: int) -> jnp.ndarray:
+    """One grouped launch over stacked block operands, quantizing the
+    stationary side first when the schedule's weight grid is sub-fp32.
+
+    Scales are per (group, output-column) — ``quantize_ste`` keeps fp32
+    gradient flow — and ``pim_matmul_grouped_q`` dequantizes on load, so
+    results are bit-identical to the per-block oracle storing the same
+    grid (identical per-column scales: zero padding never moves a
+    column's absmax)."""
+    if ctx.weight_dtype != "fp32":
+        q, s = quant.quantize_ste(b_g, ctx.weight_dtype, 1)
+        _observe_quant_error(ctx, b_g, q, s)
+        out_g = pim_matmul_grouped_q(a_g, q, s, bm=ctx.block, bn=ctx.block,
+                                     bk=ctx.block, interpret=ctx.interpret,
+                                     col_groups=col_groups)
+    else:
+        out_g = pim_matmul_grouped(a_g, b_g, bm=ctx.block, bn=ctx.block,
+                                   bk=ctx.block, interpret=ctx.interpret,
+                                   col_groups=col_groups)
+    ctx.placed_blocks += b_g.shape[0]
+    ctx.matmul_launches += 1
+    return out_g
+
+
 def blocked_matmul(ctx: LoweringContext, node_idx: int, a2: jnp.ndarray,
                    b2: jnp.ndarray) -> jnp.ndarray:
     """A (m,k) @ B (k,n) through the node's placed block grid — replica 0;
@@ -201,14 +252,12 @@ def blocked_matmul(ctx: LoweringContext, node_idx: int, a2: jnp.ndarray,
     blocks + a single segment-sum per output column-block.
     ``ctx.group=False``: the per-block oracle — one ``pim_matmul`` launch
     per placed block, partial products scatter-added in block order.
+    Sub-fp32 weight grids quantize the stationary operand per placed
+    block column in both modes (same scales, bit-identical results).
     """
     if ctx.group:
         a_g, b_g, meta = _grouped_operands(ctx, node_idx, a2, b2)
-        out_g = pim_matmul_grouped(a_g, b_g, bm=ctx.block, bn=ctx.block,
-                                   bk=ctx.block, interpret=ctx.interpret,
-                                   col_groups=meta[1])
-        ctx.placed_blocks += b_g.shape[0]
-        ctx.matmul_launches += 1
+        out_g = _launch_grouped(ctx, a_g, b_g, meta[1])
         return _grouped_reduce(out_g, meta)
 
     np_ = ctx.schedule.placement.node_placements[node_idx]
@@ -220,8 +269,11 @@ def blocked_matmul(ctx: LoweringContext, node_idx: int, a2: jnp.ndarray,
                      (ctx.block, ctx.block))
         pb = _pad_to(b2[blk.row0:blk.row0 + blk.n_rows,
                         blk.col0:blk.col0 + blk.n_cols],
-                     (ctx.block, ctx.block))
-        part = pim_matmul(pa.astype(jnp.float32), pb.astype(jnp.float32),
+                     (ctx.block, ctx.block)).astype(jnp.float32)
+        if ctx.weight_dtype != "fp32":
+            qb, sb = quant.quantize_ste(pb, ctx.weight_dtype, 0)
+            pb = qb * sb              # the block's stored grid, dequantized
+        part = pim_matmul(pa.astype(jnp.float32), pb,
                           bm=ctx.block, bn=ctx.block, bk=ctx.block,
                           interpret=ctx.interpret)
         out = out.at[:, blk.col0:blk.col0 + blk.n_cols].add(
@@ -396,11 +448,7 @@ def _fuse_matmuls(ctx: LoweringContext, lead, peers, env, fused, read,
     cols = stacked[0][2][1]          # shared C (same block grid by key)
     a_all = jnp.concatenate([s[0] for s in stacked])
     b_all = jnp.concatenate([s[1] for s in stacked])
-    out_all = pim_matmul_grouped(a_all, b_all, bm=ctx.block, bn=ctx.block,
-                                 bk=ctx.block, interpret=ctx.interpret,
-                                 col_groups=cols)
-    ctx.placed_blocks += b_all.shape[0]
-    ctx.matmul_launches += 1
+    out_all = _launch_grouped(ctx, a_all, b_all, cols)
     outs0 = None
     for i, ((e2, _, _), (_, _, meta)) in enumerate(zip(group, stacked)):
         out = _grouped_reduce(out_all[i * g_per:(i + 1) * g_per], meta)

@@ -206,8 +206,8 @@ class Schedule:
         double-counted by ``build_graph_from_jaxpr`` fails this check."""
         counts = estimator.count_ops_jaxpr(self.graph.closed_jaxpr.jaxpr)
         ideal = _ideal_report(counts, self.hierarchy.tech,
-                              self.graph.weight_bits(
-                                  self.hierarchy.subarray.n_bits))
+                              self.graph.weight_bits(ACT_BITS),
+                              self.hierarchy.subarray)
         rep = self.report
         return {
             "counts_match": (rep.macs == ideal.macs == counts.macs
@@ -319,8 +319,7 @@ class Schedule:
             node = self.graph.nodes[s.node]
             for d in node.deps:
                 dep = self.graph.nodes[d]
-                bits = (dep.out_elems * dep.repeat
-                        * self.hierarchy.subarray.n_bits)
+                bits = dep.out_elems * dep.repeat * ACT_BITS
                 if bits:
                     for link in self.hierarchy.route_links(homes[d],
                                                            homes[s.node]):
@@ -367,11 +366,26 @@ class Schedule:
             bottleneck=bottleneck)
 
 
-def _ideal_report(counts, tech: str, weight_bits: int):
+# Activations stream between subarrays at full precision regardless of
+# the stored-weight grid — only *weights* are quantized in-array.
+ACT_BITS = 32
+
+
+def _ideal_report(counts, tech: str, weight_bits: int, subarray=None):
     """pim_estimate with its own default lane provisioning (one 1024-lane
-    subarray group per 2^20 weight bits) — the single source of that rule."""
+    subarray group per 2^20 weight bits) — the single source of that rule.
+
+    ``weight_bits`` is always the **fp32-equivalent** footprint
+    (``graph.weight_bits(32)``): lane provisioning models area, and the
+    quantized datapath's claim is more throughput at *equal* area, not a
+    shrunken chip. ``subarray`` (when given) supplies the reduced-width
+    per-MAC cost so the ideal bound tracks the dtype's shorter bit-serial
+    schedule."""
+    mac_kw = {}
+    if subarray is not None:
+        mac_kw = dict(t_mac_s=subarray.t_mac_s, e_mac_j=subarray.e_mac_j)
     return estimator.pim_estimate(counts, tech=tech,
-                                  weight_bits=max(1, weight_bits))
+                                  weight_bits=max(1, weight_bits), **mac_kw)
 
 
 def _chip_lanes(ideal) -> int:
@@ -408,9 +422,9 @@ def build_schedule_from_graph(
              if partitions else None)
     place = placement_mod.place(graph, hierarchy, policy, partitions=parts)
     sub = hierarchy.subarray
-    n_bits = sub.n_bits
     counts = graph.totals()
-    ideal = _ideal_report(counts, hierarchy.tech, graph.weight_bits(n_bits))
+    ideal = _ideal_report(counts, hierarchy.tech,
+                          graph.weight_bits(ACT_BITS), sub)
     chip_lanes = _chip_lanes(ideal)
     t_elem = max(sub.t_add_s, sub.t_mul_s)
 
@@ -434,7 +448,7 @@ def build_schedule_from_graph(
         t_xfer, e_xfer, hops = 0.0, 0.0, 0
         for d in node.deps:
             dep = graph.nodes[d]
-            bits = dep.out_elems * dep.repeat * n_bits
+            bits = dep.out_elems * dep.repeat * ACT_BITS
             t, e = hierarchy.transfer_cost(bits, homes[d], home)
             t_xfer += t
             e_xfer += e
@@ -475,6 +489,7 @@ def build_schedule(fn: Callable, *args,
                    hierarchy: PIMHierarchy | None = None,
                    policy: placement_mod.PlacementPolicy | None = None,
                    tech: str = "proposed",
+                   weight_dtype: str = "fp32",
                    partitions: int | None = None,
                    expand_scans: bool = False,
                    expand_budget: int | None = None, **kwargs) -> Schedule:
@@ -483,10 +498,24 @@ def build_schedule(fn: Callable, *args,
     ``partitions=K`` additionally cuts the graph into K pipeline
     partitions, aligns their placements to tile boundaries, and enables
     :meth:`Schedule.pipeline` / partitioned compilation.
+    ``weight_dtype`` selects the stored-weight precision (``"fp32"`` /
+    ``"fp16"`` / ``"int8"`` / ``"fp8_e4m3"`` / ``"fp8_e5m2"``): weights
+    occupy fewer cells per row, MACs run a shorter bit-serial schedule,
+    and the placer spends the freed area on extra replicas of the
+    hottest nodes (lane provisioning stays at the fp32-equivalent area).
     ``expand_scans=True`` first expands scanned layer stacks into resident
     per-layer copies where subarray capacity allows (budget
     ``expand_budget`` subarrays, default ``EXPAND_BUDGET_CHIPS`` chips'
     worth), so partition cuts can land *inside* the stacks."""
+    if hierarchy is None:
+        hierarchy = default_hierarchy(tech, weight_dtype)
+    elif (weight_dtype != "fp32"
+          and hierarchy.subarray.weight_dtype != weight_dtype):
+        raise ValueError(
+            f"weight_dtype={weight_dtype!r} conflicts with the supplied "
+            f"hierarchy's subarray ({hierarchy.subarray.weight_dtype!r}); "
+            f"build the hierarchy with default_hierarchy(tech, "
+            f"weight_dtype) instead")
     with obs.span("build:schedule", lane="compile"):
         g = graph_mod.build_graph(fn, *args, **kwargs)
         sched = build_schedule_from_graph(g, hierarchy=hierarchy,
@@ -497,4 +526,5 @@ def build_schedule(fn: Callable, *args,
     m = obs.metrics()
     m.counter("mapper.schedules_built").inc()
     m.gauge("mapper.last_modeled_latency_s").set(sched.report.latency_s)
+    m.gauge("pim.weight_bits").set(float(hierarchy.subarray.n_bits))
     return sched

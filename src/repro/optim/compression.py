@@ -6,6 +6,10 @@ that keeps compressed-SGD convergence on par with full precision. Applied
 around ``jax.lax.psum`` inside ``shard_map`` when enabled — cutting the
 DP all-reduce bytes 4x (grads are otherwise f32) on the pod-to-pod links,
 where the multi-pod roofline is collective-bound.
+
+The blockwise int8 pack/unpack itself lives in ``repro.core.quant`` (one
+implementation shared with the PIM weight datapath); this module keeps
+the collective choreography and re-exports the helpers.
 """
 
 from __future__ import annotations
@@ -13,25 +17,19 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-BLOCK = 256
+from repro.core import quant
+
+BLOCK = quant.BLOCK
 
 
 def compress_int8(g: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     """-> (q int8 [nblocks, BLOCK], scale f32 [nblocks, 1]); g flattened+padded."""
-    flat = g.astype(jnp.float32).reshape(-1)
-    pad = (-flat.size) % BLOCK
-    flat = jnp.pad(flat, (0, pad))
-    blocks = flat.reshape(-1, BLOCK)
-    scale = jnp.maximum(jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
-                        / 127.0, 1e-20)
-    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
-    return q, scale
+    return quant.quantize_blockwise(g, "int8", BLOCK)
 
 
 def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray,
                     like: jnp.ndarray) -> jnp.ndarray:
-    flat = (q.astype(jnp.float32) * scale).reshape(-1)
-    return flat[: like.size].reshape(like.shape)
+    return quant.dequantize_blockwise(q, scale, like, "int8")
 
 
 def compressed_psum(grads, axis_name: str, error: dict | None = None):

@@ -85,6 +85,7 @@ class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, *, batch: int = 4,
                  max_len: int = 128, sample: Callable | None = None,
                  backend: str = "jit", pim_tech: str = "proposed",
+                 weight_dtype: str = "fp32",
                  partitions: int = 1, microbatches: int = 8,
                  paged: bool = False, kv_blocks: int | None = None,
                  kv_block_size: int = 16, prefill: str = "replay",
@@ -129,6 +130,13 @@ class ServeEngine:
         paged Pallas kernel — one launch covering all slots, blocks
         streamed via the scalar-prefetched block table.
 
+        ``weight_dtype`` (pim backend only) stores placed weights on a
+        reduced-precision grid (``int8`` / ``fp8_e4m3`` / ``fp8_e5m2``
+        / ``fp16``): weights pack denser per subarray, the freed area
+        becomes extra throughput replicas of the hottest layers, and
+        placed matmuls dequantize on load with fp32 accumulation
+        (``repro.core.quant``). Activations and the KV pool stay fp32.
+
         ``pim_compile`` forwards knobs to the schedule compiler (e.g.
         ``{"group": False, "fuse": False}`` for the legacy
         one-launch-per-block program — grouped launches model the
@@ -163,6 +171,11 @@ class ServeEngine:
                              "the paged gather path)")
         if pim_compile and backend != "pim":
             raise ValueError("pim_compile only applies to backend='pim'")
+        if weight_dtype != "fp32" and backend != "pim":
+            raise ValueError(
+                "weight_dtype only applies to backend='pim' (the jit "
+                "backend has no placed weight grid to quantize)")
+        self.weight_dtype = weight_dtype
         self.prefill = prefill
         self.attn_kernel = attn_kernel
         self.expand_scans = expand_scans
@@ -202,7 +215,8 @@ class ServeEngine:
             self._decode = jax.jit(self._decode_impl_paged if paged
                                    else self._decode_impl)
         elif backend == "pim":
-            self._build_pim(pim_tech, partitions, microbatches)
+            self._build_pim(pim_tech, partitions, microbatches,
+                            weight_dtype)
         else:
             raise ValueError(f"backend must be 'jit' or 'pim', "
                              f"got {backend!r}")
@@ -222,8 +236,10 @@ class ServeEngine:
         self._tick = 0                           # contiguous: shared tick
 
     def _build_pim(self, pim_tech: str, partitions: int,
-                   microbatches: int) -> None:
+                   microbatches: int,
+                   weight_dtype: str = "fp32") -> None:
         from repro import mapper
+        from repro.mapper.schedule import ACT_BITS
         if self.paged:
             args = (mapper.abstract_like(self.params),
                     mapper.abstract_like(self.cache),
@@ -239,18 +255,19 @@ class ServeEngine:
                     jax.ShapeDtypeStruct((), jnp.int32))
             fn = self._decode_impl
         sched = mapper.build_schedule(
-            fn, *args, tech=pim_tech,
+            fn, *args, tech=pim_tech, weight_dtype=weight_dtype,
             partitions=partitions if partitions > 1 else None,
             expand_scans=self.expand_scans)
         if self.paged and self._kv_sites:
             # place the KV pool near its attention consumers and price
             # its per-tick block reads/writes into the schedule
-            n_bits = sched.hierarchy.subarray.n_bits
+            # KV entries are activations — priced at ACT_BITS even
+            # when the weight grid is quantized
             spec = mapper.KVBlockSpec(
                 sites=self._kv_sites, num_blocks=self.kv.num_blocks,
                 block_size=self.block_size,
                 token_bits=2 * self.cfg.n_kv_heads
-                * self.cfg.resolved_head_dim * n_bits)
+                * self.cfg.resolved_head_dim * ACT_BITS)
             self.kv_placement = mapper.place_kv(sched.graph,
                                                 sched.placement, spec)
             sched.attach_kv(self.kv_placement,

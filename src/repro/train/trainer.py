@@ -48,6 +48,7 @@ class Trainer:
                  batch_fn: Callable[[int], Any],
                  jit_kwargs: dict | None = None,
                  backend: str = "jit", pim_tech: str = "proposed",
+                 weight_dtype: str = "fp32",
                  microbatches: int = 1, partitions: int = 1,
                  loss_fn: Callable | None = None, optimizer=None,
                  pim_compile: dict | None = None):
@@ -74,6 +75,12 @@ class Trainer:
         opaque ``train_step`` cannot be split); losses match the jit
         backend to fp32 tolerance because a mean over equal microbatch
         means is the full-batch mean.
+
+        ``weight_dtype`` (pim backend only) stores placed weights on a
+        reduced-precision grid (``int8`` / ``fp8_e4m3`` / ``fp8_e5m2`` /
+        ``fp16``): denser placement, more throughput replicas, and
+        dequantize-on-load matmuls with fp32 accumulation and
+        straight-through gradients (see ``repro.core.quant``).
 
         ``pim_compile`` forwards knobs to the schedule compiler (e.g.
         ``{"group": False, "fuse": False}`` for the legacy
@@ -104,13 +111,19 @@ class Trainer:
                 "backend jits the compiled schedule itself")
         if backend == "jit" and pim_compile:
             raise ValueError("pim_compile only applies to backend='pim'")
+        if backend != "pim" and weight_dtype != "fp32":
+            raise ValueError(
+                "weight_dtype only applies to backend='pim' (the jit "
+                "backend has no placed weight grid to quantize)")
         self._pim_compile = dict(pim_compile or {})
+        self.weight_dtype = weight_dtype
         if backend == "jit":
             self._step_fn = jax.jit(train_step, **(jit_kwargs or {}))
         elif backend == "pim" and not pipelined:
             from repro import mapper
             sched = mapper.build_schedule(train_step, params, opt_state,
-                                          batch_fn(0), tech=pim_tech)
+                                          batch_fn(0), tech=pim_tech,
+                                          weight_dtype=weight_dtype)
             # use_cache=False: the global program cache keys on fn
             # identity, and this per-instance train_step closure would
             # never hit but would be pinned (params and all) forever
@@ -119,7 +132,8 @@ class Trainer:
             self._step_fn = self.pim_program
         elif backend == "pim":
             self._step_fn = self._build_pipelined_step(
-                params, batch_fn(0), loss_fn, optimizer, pim_tech)
+                params, batch_fn(0), loss_fn, optimizer, pim_tech,
+                weight_dtype)
         else:
             raise ValueError(f"backend must be 'jit' or 'pim', "
                              f"got {backend!r}")
@@ -137,7 +151,8 @@ class Trainer:
         self.losses: list[float] = []
 
     def _build_pipelined_step(self, params, batch0, loss_fn, optimizer,
-                              pim_tech: str) -> Callable:
+                              pim_tech: str,
+                              weight_dtype: str = "fp32") -> Callable:
         """Compile the partitioned microbatch-pipeline step (see
         ``__init__``). Traces ``loss_fn`` at microbatch shape, cuts it
         into ``self.partitions`` stage programs, and returns a jitted
@@ -172,7 +187,8 @@ class Trainer:
             batch0)
         sched = mapper.build_schedule(
             loss_fn, mapper.abstract_like(params), *mb_abstract,
-            tech=pim_tech, partitions=self.partitions)
+            tech=pim_tech, weight_dtype=weight_dtype,
+            partitions=self.partitions)
         # use_cache=False for the same pinning reason as the whole-step
         # path: per-instance params would live in the global cache forever
         prog = mapper.compile_partitioned(sched, use_cache=False,
