@@ -4,12 +4,22 @@ Prints ``name,value,derived`` CSV rows. Usage:
     PYTHONPATH=src python -m benchmarks.run [module ...]
 
 Exits non-zero if any registered benchmark raises, so CI can run the
-whole suite as a smoke test.
+whole suite as a smoke test. Every ``BENCH_*.json`` artifact a run
+(re)writes is stamped with provenance — the git SHA and UTC timestamp it
+was produced at — so a committed perf-trajectory number can always be
+traced back to the tree that produced it
+(``scripts/validate_bench.py`` enforces the stamp).
 """
 
+import datetime
 import importlib
+import json
+import pathlib
+import subprocess
 import sys
 import traceback
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 # imported lazily per run so one module's import-time failure cannot take
 # down the rest of the suite
@@ -29,7 +39,40 @@ MODULES = (
     "pipeline_bench",
     "serve_bench",
     "quant_bench",
+    "traffic_bench",
 )
+
+
+def _git_sha() -> str:
+    try:
+        out = subprocess.run(["git", "rev-parse", "HEAD"], cwd=ROOT,
+                             capture_output=True, text=True, timeout=10)
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def stamp_provenance(paths=None) -> list[str]:
+    """Write ``provenance: {git_sha, utc}`` into each BENCH artifact
+    (default: every ``BENCH_*.json`` in the repo root). Idempotent —
+    restamping just refreshes the stamp. Returns the stamped names."""
+    paths = (sorted(ROOT.glob("BENCH_*.json")) if paths is None
+             else [pathlib.Path(p) for p in paths])
+    prov = {"git_sha": _git_sha(),
+            "utc": datetime.datetime.now(datetime.timezone.utc).isoformat()}
+    stamped = []
+    for p in paths:
+        try:
+            data = json.loads(p.read_text())
+        except (OSError, json.JSONDecodeError):
+            continue
+        if not isinstance(data, dict):
+            continue
+        data["provenance"] = prov
+        p.write_text(json.dumps(data, indent=1, sort_keys=True) + "\n")
+        stamped.append(p.name)
+    return stamped
 
 
 def main() -> None:
@@ -50,6 +93,9 @@ def main() -> None:
             traceback.print_exc()
             print(f"BENCHMARK FAILED: {name}", file=sys.stderr)
             failed.append(name)
+    stamped = stamp_provenance()
+    if stamped:
+        print(f"stamped provenance into {stamped}", file=sys.stderr)
     if failed:
         print(f"failed benchmarks: {failed}", file=sys.stderr)
         raise SystemExit(1)

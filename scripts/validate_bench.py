@@ -1,9 +1,12 @@
 """Validate the committed BENCH_*.json perf-trajectory artifacts.
 
-Every ``BENCH_*.json`` in the repo root must parse as JSON, and the files
-CI gates on must carry their gate fields with sane values — a benchmark
-refactor that silently drops a gated field would otherwise turn the CI
-gate into a no-op. Run from the repo root (CI does)::
+Every ``BENCH_*.json`` in the repo root must parse as JSON, carry a
+``provenance`` stamp (the git SHA + UTC timestamp ``benchmarks/run.py``
+writes, so a committed number is traceable to the tree that produced
+it), and the files CI gates on must carry their gate fields with sane
+values — a benchmark refactor that silently drops a gated field would
+otherwise turn the CI gate into a no-op. Run from the repo root (CI
+does)::
 
     python scripts/validate_bench.py
 
@@ -12,6 +15,7 @@ Exits non-zero with a per-file report on any violation.
 
 from __future__ import annotations
 
+import datetime
 import json
 import math
 import pathlib
@@ -45,7 +49,32 @@ GATES = {
         "llama3_8b_smoke": ["replica_ratio_int8", "latency_ratio_int8",
                             "max_layer_error_int8", "tokens_per_s_int8"],
     },
+    "BENCH_traffic": {
+        "static": ["goodput_per_tick", "ttft_p95_ticks"],
+        "continuous": ["goodput_per_tick", "ttft_p95_ticks",
+                       "goodput_ratio", "ttft_p95_ratio", "preemptions"],
+        "oom_demo": ["baseline_ooms", "continuous_ooms", "completed"],
+    },
 }
+
+
+def _check_provenance(path: pathlib.Path, data: dict,
+                      errors: list[str]) -> None:
+    prov = data.get("provenance")
+    if not isinstance(prov, dict):
+        errors.append(f"{path.name}: missing provenance stamp (rerun "
+                      f"benchmarks/run.py to stamp git_sha + utc)")
+        return
+    sha = prov.get("git_sha")
+    if not isinstance(sha, str) or not sha:
+        errors.append(f"{path.name}: provenance.git_sha must be a "
+                      f"non-empty string, got {sha!r}")
+    utc = prov.get("utc")
+    try:
+        datetime.datetime.fromisoformat(utc)
+    except (TypeError, ValueError):
+        errors.append(f"{path.name}: provenance.utc must be an ISO-8601 "
+                      f"timestamp, got {utc!r}")
 
 
 def _check(path: pathlib.Path, errors: list[str]) -> None:
@@ -57,6 +86,7 @@ def _check(path: pathlib.Path, errors: list[str]) -> None:
     if not isinstance(data, dict) or not data:
         errors.append(f"{path.name}: expected a non-empty JSON object")
         return
+    _check_provenance(path, data, errors)
     for variant, fields in GATES.get(path.stem, {}).items():
         block = data.get(variant)
         if not isinstance(block, dict):

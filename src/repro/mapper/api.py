@@ -44,6 +44,7 @@ def map_arch(name: str, kind: str = "train", *, seq_len: int = 128,
              policy: placement_mod.PlacementPolicy | None = None,
              tech: str = "proposed",
              weight_dtype: str = "fp32",
+             ideal_provision: str = "fp32",
              partitions: int | None = None,
              expand_scans: bool = False,
              expand_budget: int | None = None) -> schedule_mod.Schedule:
@@ -60,7 +61,9 @@ def map_arch(name: str, kind: str = "train", *, seq_len: int = 128,
     ``weight_dtype`` stores weights on a reduced-precision grid
     (``"int8"`` / ``"fp8_e4m3"`` / ``"fp8_e5m2"`` / ``"fp16"``) and
     spends the freed subarrays on replicas (see
-    ``build_schedule``).
+    ``build_schedule``); ``ideal_provision="quantized"`` provisions the
+    ideal-latency reference at the reduced grid's density instead of
+    fp32-equivalent area.
     """
     from repro.launch import steps as steps_mod
 
@@ -78,7 +81,7 @@ def map_arch(name: str, kind: str = "train", *, seq_len: int = 128,
         return schedule_mod.build_schedule(
             step, p_shapes, o_shapes, b_shapes,
             hierarchy=hierarchy, policy=policy, tech=tech,
-            weight_dtype=weight_dtype,
+            weight_dtype=weight_dtype, ideal_provision=ideal_provision,
             partitions=partitions, expand_scans=expand_scans,
             expand_budget=expand_budget)
     if kind == "serve":
@@ -88,7 +91,7 @@ def map_arch(name: str, kind: str = "train", *, seq_len: int = 128,
         return schedule_mod.build_schedule(
             step, p_shapes, c_shapes, token, pos,
             hierarchy=hierarchy, policy=policy, tech=tech,
-            weight_dtype=weight_dtype,
+            weight_dtype=weight_dtype, ideal_provision=ideal_provision,
             partitions=partitions, expand_scans=expand_scans,
             expand_budget=expand_budget)
     raise ValueError(f"kind must be 'train' or 'serve', got {kind!r}")
@@ -99,6 +102,7 @@ def map_lenet(kind: str = "serve", *, batch: int = 4, lr: float = 0.05,
               policy: placement_mod.PlacementPolicy | None = None,
               tech: str = "proposed",
               weight_dtype: str = "fp32",
+              ideal_provision: str = "fp32",
               partitions: int | None = None,
               expand_scans: bool = False) -> schedule_mod.Schedule:
     """Map the paper's LeNet: ``serve`` = forward pass, ``train`` = one
@@ -115,7 +119,7 @@ def map_lenet(kind: str = "serve", *, batch: int = 4, lr: float = 0.05,
         return schedule_mod.build_schedule(
             lenet.lenet_apply, _abstract(params), images,
             hierarchy=hierarchy, policy=policy, tech=tech,
-            weight_dtype=weight_dtype,
+            weight_dtype=weight_dtype, ideal_provision=ideal_provision,
             partitions=partitions, expand_scans=expand_scans)
     if kind == "train":
         labels = jax.ShapeDtypeStruct((batch,), jnp.int32)
@@ -129,7 +133,7 @@ def map_lenet(kind: str = "serve", *, batch: int = 4, lr: float = 0.05,
         return schedule_mod.build_schedule(
             train_step, _abstract(params), images, labels,
             hierarchy=hierarchy, policy=policy, tech=tech,
-            weight_dtype=weight_dtype,
+            weight_dtype=weight_dtype, ideal_provision=ideal_provision,
             partitions=partitions, expand_scans=expand_scans)
     raise ValueError(f"kind must be 'train' or 'serve', got {kind!r}")
 

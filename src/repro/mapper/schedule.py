@@ -192,6 +192,7 @@ class Schedule:
     report: ScheduleReport
     kv_placement: "placement_mod.KVPlacement | None" = None
     kv: KVTraffic | None = None
+    ideal_provision: str = "fp32"   # lane-provisioning basis of the ideal
 
     @property
     def partitions(self) -> list[placement_mod.GraphPartition] | None:
@@ -206,7 +207,8 @@ class Schedule:
         double-counted by ``build_graph_from_jaxpr`` fails this check."""
         counts = estimator.count_ops_jaxpr(self.graph.closed_jaxpr.jaxpr)
         ideal = _ideal_report(counts, self.hierarchy.tech,
-                              self.graph.weight_bits(ACT_BITS),
+                              _provision_bits(self.graph, self.hierarchy,
+                                              self.ideal_provision),
                               self.hierarchy.subarray)
         rep = self.report
         return {
@@ -371,16 +373,34 @@ class Schedule:
 ACT_BITS = 32
 
 
+def _provision_bits(graph: graph_mod.OpGraph, hierarchy: PIMHierarchy,
+                    ideal_provision: str) -> int:
+    """Weight-bit footprint the ideal report provisions lanes from.
+
+    ``"fp32"`` (default): the fp32-equivalent footprint
+    (``graph.weight_bits(32)``) — lane provisioning models *area*, and
+    the quantized datapath's claim is more throughput at equal area, not
+    a shrunken chip. ``"quantized"``: the stored-dtype footprint
+    (``graph.weight_bits(subarray.n_bits)``) — the chip a designer would
+    actually provision if the quantized MAC schedule were the target,
+    i.e. fewer subarrays for the same weights, so the ideal bound
+    tightens toward the denser placement."""
+    if ideal_provision not in ("fp32", "quantized"):
+        raise ValueError(f"ideal_provision must be 'fp32' or 'quantized', "
+                         f"got {ideal_provision!r}")
+    bits = (hierarchy.subarray.n_bits if ideal_provision == "quantized"
+            else ACT_BITS)
+    return graph.weight_bits(bits)
+
+
 def _ideal_report(counts, tech: str, weight_bits: int, subarray=None):
     """pim_estimate with its own default lane provisioning (one 1024-lane
     subarray group per 2^20 weight bits) — the single source of that rule.
 
-    ``weight_bits`` is always the **fp32-equivalent** footprint
-    (``graph.weight_bits(32)``): lane provisioning models area, and the
-    quantized datapath's claim is more throughput at *equal* area, not a
-    shrunken chip. ``subarray`` (when given) supplies the reduced-width
-    per-MAC cost so the ideal bound tracks the dtype's shorter bit-serial
-    schedule."""
+    ``weight_bits`` is the provisioning footprint chosen by
+    ``_provision_bits`` (fp32-equivalent by default). ``subarray`` (when
+    given) supplies the reduced-width per-MAC cost so the ideal bound
+    tracks the dtype's shorter bit-serial schedule."""
     mac_kw = {}
     if subarray is not None:
         mac_kw = dict(t_mac_s=subarray.t_mac_s, e_mac_j=subarray.e_mac_j)
@@ -409,7 +429,8 @@ def build_schedule_from_graph(
         tech: str = "proposed",
         partitions: int | None = None,
         expand_scans: bool = False,
-        expand_budget: int | None = None) -> Schedule:
+        expand_budget: int | None = None,
+        ideal_provision: str = "fp32") -> Schedule:
     hierarchy = hierarchy or default_hierarchy(tech)
     if expand_scans:
         sub_ = hierarchy.subarray
@@ -424,7 +445,8 @@ def build_schedule_from_graph(
     sub = hierarchy.subarray
     counts = graph.totals()
     ideal = _ideal_report(counts, hierarchy.tech,
-                          graph.weight_bits(ACT_BITS), sub)
+                          _provision_bits(graph, hierarchy, ideal_provision),
+                          sub)
     chip_lanes = _chip_lanes(ideal)
     t_elem = max(sub.t_add_s, sub.t_mul_s)
 
@@ -482,7 +504,8 @@ def build_schedule_from_graph(
         parallel_lanes=chip_lanes,
     )
     return Schedule(graph=graph, placement=place, hierarchy=hierarchy,
-                    stages=stages, report=report)
+                    stages=stages, report=report,
+                    ideal_provision=ideal_provision)
 
 
 def build_schedule(fn: Callable, *args,
@@ -492,7 +515,8 @@ def build_schedule(fn: Callable, *args,
                    weight_dtype: str = "fp32",
                    partitions: int | None = None,
                    expand_scans: bool = False,
-                   expand_budget: int | None = None, **kwargs) -> Schedule:
+                   expand_budget: int | None = None,
+                   ideal_provision: str = "fp32", **kwargs) -> Schedule:
     """Compile ``fn(*args, **kwargs)`` into a placed, cost-rolled static
     schedule (args may be ShapeDtypeStructs; nothing is allocated).
     ``partitions=K`` additionally cuts the graph into K pipeline
@@ -503,6 +527,12 @@ def build_schedule(fn: Callable, *args,
     occupy fewer cells per row, MACs run a shorter bit-serial schedule,
     and the placer spends the freed area on extra replicas of the
     hottest nodes (lane provisioning stays at the fp32-equivalent area).
+    ``ideal_provision`` picks the footprint the *ideal* bound provisions
+    lanes from: ``"fp32"`` (default, fp32-equivalent area) or
+    ``"quantized"`` (the stored dtype's denser footprint — the ideal a
+    right-sized quantized chip would hit; ``reconcile()``'s
+    ``latency >= ideal`` invariant holds at either setting because stage
+    lanes are capped at the same provisioning).
     ``expand_scans=True`` first expands scanned layer stacks into resident
     per-layer copies where subarray capacity allows (budget
     ``expand_budget`` subarrays, default ``EXPAND_BUDGET_CHIPS`` chips'
@@ -522,7 +552,8 @@ def build_schedule(fn: Callable, *args,
                                           policy=policy, tech=tech,
                                           partitions=partitions,
                                           expand_scans=expand_scans,
-                                          expand_budget=expand_budget)
+                                          expand_budget=expand_budget,
+                                          ideal_provision=ideal_provision)
     m = obs.metrics()
     m.counter("mapper.schedules_built").inc()
     m.gauge("mapper.last_modeled_latency_s").set(sched.report.latency_s)

@@ -43,6 +43,7 @@ def _log_edges(lo: float = 1e-6, hi: float = 100.0) -> tuple[float, ...]:
 
 
 DEFAULT_EDGES = _log_edges()      # 1 us .. 100 s, 1-2-5 per decade
+TICK_EDGES = _log_edges(1.0, 1e6)  # virtual-clock (decode-tick) domain
 RESERVOIR_MAX = 65536             # raw values kept for exact percentiles
 
 

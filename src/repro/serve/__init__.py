@@ -1,5 +1,9 @@
 from repro.serve.engine import Request, ServeEngine
-from repro.serve.kv import KVCacheOOM, PagedKVCache
+from repro.serve.kv import KVCacheOOM, PagedKVCache, SwappedPages
 from repro.serve.router import Router
+from repro.serve.workload import (TrafficReport, WorkloadSpec, generate,
+                                  replay)
 
-__all__ = ["KVCacheOOM", "PagedKVCache", "Request", "Router", "ServeEngine"]
+__all__ = ["KVCacheOOM", "PagedKVCache", "Request", "Router",
+           "ServeEngine", "SwappedPages", "TrafficReport", "WorkloadSpec",
+           "generate", "replay"]

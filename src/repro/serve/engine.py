@@ -49,7 +49,7 @@ import numpy as np
 from repro import obs
 from repro.configs.base import ArchConfig
 from repro.models.transformer import DecoderLM, build_model
-from repro.serve.kv import PagedKVCache
+from repro.serve.kv import KVCacheOOM, PagedKVCache
 
 
 @dataclasses.dataclass
@@ -65,6 +65,16 @@ class Request:
     t_submit: float | None = None
     t_first: float | None = None
     t_done: float | None = None
+    # virtual-clock stamps (decode ticks): arrival set by the workload
+    # generator, first/done stamped by the replay driver — TTFT measured
+    # from *arrival*, queue wait included (repro.serve.workload)
+    t_arrival: float | None = None
+    first_tick: int | None = None
+    done_tick: int | None = None
+    # preemption: bumped per swap-out; ``resume`` holds the engine's saved
+    # decode state + scratch pages between swap-out and re-admission
+    preemptions: int = 0
+    resume: dict | None = dataclasses.field(default=None, repr=False)
 
     @property
     def ttft_s(self) -> float | None:
@@ -80,6 +90,14 @@ class Request:
             return None
         return (self.t_done - self.t_first) / (len(self.out) - 1)
 
+    @property
+    def ttft_ticks(self) -> float | None:
+        """Virtual-clock TTFT: decode ticks from arrival to first token
+        (None until the replay driver stamps both ends)."""
+        if self.t_arrival is None or self.first_tick is None:
+            return None
+        return self.first_tick - self.t_arrival
+
 
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, *, batch: int = 4,
@@ -91,7 +109,10 @@ class ServeEngine:
                  kv_block_size: int = 16, prefill: str = "replay",
                  attn_kernel: bool = False,
                  pim_compile: dict | None = None,
-                 expand_scans: bool = False):
+                 expand_scans: bool = False,
+                 scheduler: str = "continuous",
+                 admission: str | None = None,
+                 preempt: bool = True):
         """``backend="jit"`` jits the decode step; ``backend="pim"`` maps
         it onto the PIM hierarchy and decodes through the compiled
         schedule (``repro.mapper.compile``) — placed matmuls run as
@@ -140,7 +161,28 @@ class ServeEngine:
         ``pim_compile`` forwards knobs to the schedule compiler (e.g.
         ``{"group": False, "fuse": False}`` for the legacy
         one-launch-per-block program — grouped launches model the
-        hardware but serialize under CPU interpret emulation)."""
+        hardware but serialize under CPU interpret emulation).
+
+        Control-plane knobs:
+
+        ``scheduler="continuous"`` (default) refills any slot the moment
+        it frees — a finished slot is re-admitted *the same tick*;
+        ``"static"`` is the wave-batching baseline (admit a full batch,
+        drain it completely, admit the next), kept for the goodput
+        benchmark. ``admission`` gates what the scheduler may admit:
+        ``"kv"`` (paged default) admits the queue head only when the
+        pool's free + evictable blocks cover the request's *peak* fresh
+        footprint (prompt + max_tokens, minus cached shared prefix
+        blocks) — oversubscribed offered load queues instead of OOMing;
+        ``"slot"`` (contiguous default, and the pre-admission-control
+        behavior) admits into any free slot. A request whose peak
+        footprint exceeds the whole pool raises ``KVCacheOOM`` at
+        admission — it could never run. ``preempt=True`` (paged default)
+        arms preemption: when a decode tick cannot allocate a block, the
+        youngest-admitted slot's pages are swapped out to host scratch
+        (``PagedKVCache.swap_out``) and the request requeued at the
+        front; re-admission migrates the pages back (``swap_in``) and
+        decode resumes token-identically."""
         self.cfg = cfg
         self.model: DecoderLM = build_model(cfg)
         self.params = params
@@ -175,6 +217,23 @@ class ServeEngine:
             raise ValueError(
                 "weight_dtype only applies to backend='pim' (the jit "
                 "backend has no placed weight grid to quantize)")
+        if scheduler not in ("continuous", "static"):
+            raise ValueError(f"scheduler must be 'continuous' or "
+                             f"'static', got {scheduler!r}")
+        if admission is None:
+            admission = "kv" if paged else "slot"
+        if admission not in ("kv", "slot"):
+            raise ValueError(f"admission must be 'kv' or 'slot', "
+                             f"got {admission!r}")
+        if admission == "kv" and not paged:
+            raise ValueError("admission='kv' requires paged=True (the "
+                             "contiguous lanes have no block pool to "
+                             "gate on)")
+        self.scheduler = scheduler
+        self.admission = admission
+        self.preempt = bool(preempt) and paged
+        self.preemptions = 0
+        self.resumes = 0
         self.weight_dtype = weight_dtype
         self.prefill = prefill
         self.attn_kernel = attn_kernel
@@ -234,6 +293,14 @@ class ServeEngine:
         self._last_tok = np.zeros(batch, np.int32)
         self._pos = np.zeros(batch, np.int32)    # paged: per-slot position
         self._tick = 0                           # contiguous: shared tick
+        # admission order per slot (monotone): the preemption victim is
+        # the youngest-admitted active slot — deterministic, and older
+        # requests are never starved by later arrivals
+        self._adm_seq = np.full(batch, -1, np.int64)
+        self._adm_counter = 0
+        # incrementally maintained total remaining work (see
+        # ``pending_work``): O(1) per tick instead of O(queue)
+        self._work = 0
 
     def _build_pim(self, pim_tech: str, partitions: int,
                    microbatches: int,
@@ -309,6 +376,7 @@ class ServeEngine:
         if req.t_submit is None:      # router stamps before delegating
             req.t_submit = time.monotonic()
         obs.metrics().counter("serve.submitted").inc()
+        self._work += self._work_of(req)
         self.queue.append(req)
 
     def prefix_lookup(self, prompt) -> int:
@@ -316,12 +384,37 @@ class ServeEngine:
         contiguous) — the router's prefix-affinity signal."""
         return self.kv.lookup_prefix(prompt) if self.paged else 0
 
+    def kv_headroom(self) -> int:
+        """Blocks the pool could hand out right now (free + evictable);
+        effectively unbounded for contiguous engines — the router's
+        KV-pressure routing signal."""
+        return self.kv.available_blocks if self.paged else (1 << 30)
+
+    def kv_blocks_needed(self, req: Request) -> int:
+        """Fresh blocks admitting ``req`` here would eventually allocate
+        (0 when contiguous)."""
+        return (self.kv.blocks_needed(req.prompt, req.max_tokens)
+                if self.paged else 0)
+
+    @staticmethod
+    def _work_of(req: Request) -> int:
+        """Decode ticks this request still needs: unreplayed prompt
+        tokens (resume state included) plus ungenerated tokens."""
+        k = req.resume["prompt_idx"] if req.resume is not None else 0
+        return (max(0, len(req.prompt) - 1 - k)
+                + req.max_tokens - len(req.out))
+
     def pending_work(self) -> int:
         """Upper bound on the decode ticks needed to drain queue + slots:
-        unreplayed prompt tokens plus ungenerated tokens."""
-        w = 0
-        for r in self.queue:
-            w += max(0, len(r.prompt) - 1) + r.max_tokens
+        unreplayed prompt tokens plus ungenerated tokens. Maintained
+        incrementally (O(1) per tick/submit) — deep queues don't pay an
+        O(queue) rescan per tick or per routing decision."""
+        return self._work
+
+    def _pending_work_recompute(self) -> int:
+        """O(queue + slots) reference for the incremental counter
+        (tests assert they agree after churn/preemption)."""
+        w = sum(self._work_of(r) for r in self.queue)
         for s, r in enumerate(self.slots):
             if r is not None:
                 w += (max(0, len(r.prompt) - 1 - int(self._prompt_idx[s]))
@@ -332,11 +425,44 @@ class ServeEngine:
         return ([r.rid for r in self.slots if r is not None]
                 + [r.rid for r in self.queue])
 
+    def _admissible(self, req: Request) -> bool:
+        """KV-aware admission gate: admit only when the pool can cover
+        the request's peak fresh-block footprint, keeping one spare block
+        per already-active slot so imminent growth doesn't immediately
+        preempt the admission (anti-thrash headroom)."""
+        total = self.kv.total_blocks_for(len(req.prompt), req.max_tokens)
+        if total > self.kv.allocatable_blocks:
+            raise KVCacheOOM(
+                f"request rid={req.rid} needs {total} KV blocks at peak "
+                f"(prompt {len(req.prompt)} + max_tokens "
+                f"{req.max_tokens}, block_size {self.block_size}) but the "
+                f"pool only has {self.kv.allocatable_blocks} allocatable "
+                f"blocks; raise kv_blocks or shrink the request")
+        if total > self.kv.max_blocks:
+            raise KVCacheOOM(
+                f"request rid={req.rid} needs {total} KV blocks at peak "
+                f"(prompt {len(req.prompt)} + max_tokens "
+                f"{req.max_tokens}) but a slot's table holds only "
+                f"{self.kv.max_blocks} blocks (max_len {self.max_len}); "
+                f"raise max_len or shrink the request")
+        reserve = sum(1 for r in self.slots if r is not None)
+        needed = self.kv_blocks_needed(req)
+        return self.kv.available_blocks >= needed + reserve
+
     def _admit(self) -> None:
+        if self.scheduler == "static" and any(
+                r is not None for r in self.slots):
+            return          # wave batching: drain the batch first
         for s in range(self.batch):
             if self.slots[s] is None and self.queue:
-                req = self.queue.popleft()
+                req = self.queue[0]
+                if (self.paged and self.admission == "kv"
+                        and not self._admissible(req)):
+                    break   # FIFO: the head waits, nothing overtakes it
+                self.queue.popleft()
                 self.slots[s] = req
+                self._adm_seq[s] = self._adm_counter
+                self._adm_counter += 1
                 obs.metrics().counter("serve.admitted").inc()
                 tr = obs.tracer()
                 if tr.enabled:
@@ -346,13 +472,80 @@ class ServeEngine:
                 # masking the previous occupant's sample/cursor
                 self._prompt_idx[s] = 0
                 self._last_tok[s] = 0
-                if self.paged:
+                if self.paged and req.resume is not None:
+                    self._resume_slot(s, req)
+                elif self.paged:
                     shared = self.kv.alloc_slot(s, req.prompt)
                     self._pos[s] = shared
                     self._prompt_idx[s] = shared   # skip cached prefix
                     self.prefix_skipped_tokens += shared
+                    self._work -= shared
                     if self.prefill == "batch":
                         self._prefill_slot(s, req, shared)
+
+    def _resume_slot(self, s: int, req: Request) -> None:
+        """Re-admit a preempted request: migrate its scratch pages back
+        into the pool and restore the saved decode cursor — the next tick
+        continues exactly where the swap-out interrupted."""
+        st = req.resume
+        self.cache, _ = self.kv.swap_in(self.cache, s, req.prompt,
+                                        st["pages"])
+        self._pos[s] = st["pos"]
+        self._prompt_idx[s] = st["prompt_idx"]
+        self._last_tok[s] = st["last_tok"]
+        req.resume = None
+        self.resumes += 1
+        obs.metrics().counter("serve.resumed").inc()
+        tr = obs.tracer()
+        if tr.enabled:
+            tr.instant("resume", lane="serve", rid=req.rid, slot=s)
+
+    def _preempt(self, s: int) -> None:
+        """Swap the slot's KV pages out to host scratch, save its decode
+        cursor on the request, and requeue it at the *front* — it resumes
+        as soon as capacity frees, ahead of new arrivals."""
+        req = self.slots[s]
+        pages = self.kv.swap_out(self.cache, s)
+        req.resume = dict(pages=pages, pos=int(self._pos[s]),
+                          prompt_idx=int(self._prompt_idx[s]),
+                          last_tok=int(self._last_tok[s]))
+        req.preemptions += 1
+        self.preemptions += 1
+        obs.metrics().counter("serve.preempted").inc()
+        tr = obs.tracer()
+        if tr.enabled:
+            tr.instant("preempt", lane="serve", rid=req.rid, slot=s,
+                       blocks=pages.n_blocks)
+        self.slots[s] = None
+        self._adm_seq[s] = -1
+        self._prompt_idx[s] = 0
+        self._last_tok[s] = 0
+        self._pos[s] = 0
+        self.queue.appendleft(req)
+
+    def _ensure_active(self, active: list[int]) -> list[int]:
+        """Make every active slot's next position writable, swapping out
+        victims (youngest admission first) when the pool runs dry.
+        Returns the surviving active slots. With ``preempt=False`` the
+        allocator's ``KVCacheOOM`` propagates — the legacy behavior."""
+        # oldest admissions ensure first, so a victim is always younger
+        # than (or equal to) the slot that triggered the shortfall
+        for s in sorted(active, key=lambda s: self._adm_seq[s]):
+            while self.slots[s] is not None:
+                try:
+                    self.cache = self.kv.ensure(self.cache, s,
+                                                int(self._pos[s]))
+                    break
+                except KVCacheOOM:
+                    if not self.preempt:
+                        raise
+                    victims = [v for v in range(self.batch)
+                               if v != s and self.slots[v] is not None]
+                    if not victims:
+                        raise
+                    self._preempt(max(victims,
+                                      key=lambda v: self._adm_seq[v]))
+        return [s for s in active if self.slots[s] is not None]
 
     def _prefill_slot(self, s: int, req: Request, p0: int) -> None:
         """Write the slot's uncached prompt KV (all but the final prompt
@@ -385,6 +578,7 @@ class ServeEngine:
             self.kv.note_filled(s, pos)         # register full prompt blocks
         self._pos[s] = p0 + n_new
         self._prompt_idx[s] = len(req.prompt) - 1
+        self._work -= n_new          # prompt positions consumed tick-free
         self.prefill_batched_tokens += n_new
         self.kv_bytes_written += n_new * self._tok_bytes
         # block-granular reads, closed form: sum over the n_new written
@@ -397,6 +591,7 @@ class ServeEngine:
     def _recycle(self, s: int) -> None:
         """Free the slot and explicitly reset all of its decode state."""
         self.slots[s] = None
+        self._adm_seq[s] = -1
         self._prompt_idx[s] = 0
         self._last_tok[s] = 0
         if self.paged:
@@ -412,7 +607,9 @@ class ServeEngine:
         return np.asarray(self.sample(logits), np.int32)
 
     def tick_once(self) -> bool:
-        """Advance every active slot one token. Returns False when no
+        """Advance every active slot one token. Any slot that finishes is
+        refilled from the queue *within this same tick* (continuous
+        batching — see the trailing ``_admit``). Returns False when no
         progress is possible: nothing admitted, or — contiguous only —
         the shared tick reached the lane bound (capacity exhaustion)."""
         self._admit()
@@ -421,6 +618,10 @@ class ServeEngine:
             return False
         if not self.paged and self._tick >= self.max_len - 1:
             return False          # shared lanes full; caller reports starved
+        if self.paged:
+            # writability first: this may preempt (swap out) victims, so
+            # the feed is built only from the survivors
+            active = self._ensure_active(active)
         feed = np.zeros(self.batch, np.int32)
         for s in active:
             req = self.slots[s]
@@ -428,8 +629,6 @@ class ServeEngine:
             feed[s] = (req.prompt[k] if k < len(req.prompt)
                        else self._last_tok[s])
         if self.paged:
-            for s in active:
-                self.cache = self.kv.ensure(self.cache, s, int(self._pos[s]))
             with obs.span("decode:tick", lane="serve", tick=self._tick,
                           active=len(active)):
                 logits, self.cache = self._decode(
@@ -454,6 +653,7 @@ class ServeEngine:
             self.kv_bytes_written += len(active) * self._tok_bytes
         for s in active:
             req = self.slots[s]
+            self._work -= 1        # one prompt or output token per tick
             if self._prompt_idx[s] < len(req.prompt) - 1:
                 self._prompt_idx[s] += 1
             else:
@@ -468,6 +668,7 @@ class ServeEngine:
                 hit_eos = req.eos is not None and int(nxt[s]) == req.eos
                 if len(req.out) >= req.max_tokens or hit_eos:
                     req.done = True
+                    self._work -= req.max_tokens - len(req.out)  # early EOS
                     req.t_done = time.monotonic()
                     if req.tpot_s is not None:
                         obs.metrics().histogram("serve.tpot_s").observe(

@@ -29,6 +29,14 @@ there and unallocated table entries clamp to it, so the one batched
 decode call stays shape-static while never corrupting live blocks (reads
 from it are masked by the per-slot position bound).
 
+Preemption support (:meth:`swap_out` / :meth:`swap_in`): a victim slot's
+pages are copied to host scratch and its blocks returned to the pool;
+resuming re-attaches any still-cached prefix blocks by reference and
+restores only the remainder from scratch, bit-exactly. Cross-engine
+prefix migration (:meth:`export_prefix` / :meth:`import_prefix`) moves a
+cached prefix chain between two pools holding the same model's KV — the
+router uses it to make a prefix cached on engine A servable from B.
+
 The allocator is host-side metadata only; the device storage pytree is
 threaded through the two methods that must touch it (``ensure`` for the
 copy-on-write block copy). ``device_table()`` materializes the clamped
@@ -62,6 +70,22 @@ class _SlotMeta:
 
     chain_keys: list[bytes]       # prefix hash per full prompt block
     prompt_blocks: int            # blocks holding only prompt tokens
+
+
+@dataclasses.dataclass
+class SwappedPages:
+    """Host-side scratch copy of a preempted slot's KV pages.
+
+    ``pages`` maps each occupied table index to the per-leaf host arrays
+    of its physical block (one ``[n_units, block_size, n_kv, head_dim]``
+    slab per attention-site leaf); the blocks themselves went back to
+    the pool when the slot was swapped out."""
+
+    pages: list[tuple[int, object]]     # (table index, host pytree)
+
+    @property
+    def n_blocks(self) -> int:
+        return len(self.pages)
 
 
 class PagedKVCache:
@@ -103,6 +127,9 @@ class PagedKVCache:
             "shared_blocks": 0,       # attached by reference at admission
             "shared_tokens": 0,       # prompt tokens skipped via sharing
             "cow_copies": 0,
+            "swapped_out_blocks": 0,  # preemption: pages moved to scratch
+            "swapped_in_blocks": 0,   # resume: pages restored from scratch
+            "imported_blocks": 0,     # prefix blocks migrated in (router)
         }
 
     # -- content addressing --------------------------------------------------
@@ -191,6 +218,132 @@ class PagedKVCache:
         self._meta[dst] = _SlotMeta(chain_keys=list(src_meta.chain_keys),
                                     prompt_blocks=src_meta.prompt_blocks)
         self._device_table = None
+
+    # -- admission accounting ------------------------------------------------
+
+    @property
+    def allocatable_blocks(self) -> int:
+        """Pool capacity available to slots (scratch block excluded)."""
+        return self.num_blocks - 1
+
+    @property
+    def available_blocks(self) -> int:
+        """Blocks an allocation could obtain right now: the free list
+        plus the evictable (ref-0) cached prefix blocks."""
+        return len(self._free) + len(self._cached)
+
+    def total_blocks_for(self, prompt_len: int, max_tokens: int) -> int:
+        """Blocks a request references at peak (shared prefix included)."""
+        return math.ceil((prompt_len + max_tokens) / self.block_size)
+
+    def blocks_needed(self, prompt, max_tokens: int) -> int:
+        """Pool capacity admitting this request would consume out of
+        ``available_blocks``: its peak footprint minus the cached prefix
+        blocks it can attach **that are live elsewhere** (ref > 0 — those
+        cost nothing). An evictable ref-0 cached block saves the replay
+        compute but still spends one unit of availability when attached
+        (it leaves the evictable pool), so it counts as needed — treating
+        it as free double-counts it and over-admits into an OOM."""
+        total = self.total_blocks_for(len(prompt), max_tokens)
+        usable = min((len(prompt) - 1) // self.block_size, self.max_blocks)
+        live_shared = 0
+        for key in self._chain_keys(prompt, usable):
+            bid = self._prefix.get(key)
+            if bid is None:
+                break
+            if self.ref[bid] > 0:
+                live_shared += 1
+        return max(0, total - live_shared)
+
+    # -- preemption: page swap-out / swap-in ---------------------------------
+
+    def swap_out(self, cache, slot: int) -> SwappedPages:
+        """Copy every block the slot references to host scratch, then
+        free the slot — the pages leave the pool, the content survives.
+        ``cache`` is read, never written (device storage is immutable
+        here; the blocks are simply reclaimable afterwards)."""
+        if self._meta[slot] is None:
+            raise RuntimeError(f"slot {slot} is not allocated")
+        pages: list[tuple[int, object]] = []
+        for bi in range(self.max_blocks):
+            bid = int(self.table[slot, bi])
+            if bid >= 0:
+                content = jax.tree.map(lambda a: np.asarray(a[:, bid]),
+                                       cache)
+                pages.append((bi, content))
+        self.free_slot(slot)
+        self.stats["swapped_out_blocks"] += len(pages)
+        return SwappedPages(pages=pages)
+
+    def swap_in(self, cache, slot: int, prompt, swapped: SwappedPages):
+        """Re-admit a preempted request: attach any prefix blocks still
+        cached by reference (same as a fresh admission), then restore the
+        remaining pages from scratch into fresh blocks. Returns
+        ``(cache, shared_tokens)`` — the block content is restored
+        bit-exactly, so decode resumes token-identical to an uninterrupted
+        run."""
+        shared = self.alloc_slot(slot, prompt)
+        covered = shared // self.block_size
+        restored = 0
+        for bi, content in swapped.pages:
+            if bi < covered:
+                continue            # immutable full prompt block, re-attached
+            new = self._get_free_block()
+            self.table[slot, bi] = new
+            self.ref[new] = 1
+            cache = jax.tree.map(
+                lambda a, c: a.at[:, new].set(jnp.asarray(c)),
+                cache, content)
+            restored += 1
+        if restored:
+            self.stats["allocated_blocks"] += restored
+            self.stats["swapped_in_blocks"] += restored
+            self._device_table = None
+        return cache, shared
+
+    # -- cross-engine prefix migration ---------------------------------------
+
+    def export_prefix(self, cache, prompt):
+        """Host-side copy of the cached full-prefix chain covering
+        ``prompt`` (longest hit, same cap as :meth:`lookup_prefix`).
+        Returns ``(tokens_covered, pages)`` where ``pages`` is one host
+        pytree per chain block, in chain order."""
+        bs = self.block_size
+        usable = min((len(prompt) - 1) // bs, self.max_blocks)
+        pages = []
+        for key in self._chain_keys(prompt, usable):
+            bid = self._prefix.get(key)
+            if bid is None:
+                break
+            pages.append(jax.tree.map(lambda a: np.asarray(a[:, bid]),
+                                      cache))
+        return len(pages) * bs, pages
+
+    def import_prefix(self, cache, prompt, pages):
+        """Install an exported prefix chain into this pool: each block
+        lands in a fresh physical block, registered in the prefix index
+        as an evictable ref-0 cached block (exactly the state a locally
+        computed prefix block reaches once its last referent drains).
+        Chain blocks this pool already caches are skipped. Returns the
+        updated storage pytree."""
+        keys = self._chain_keys(prompt, len(pages))
+        imported = 0
+        for key, content in zip(keys, pages):
+            if key in self._prefix:
+                continue
+            new = self._get_free_block()
+            cache = jax.tree.map(
+                lambda a, c: a.at[:, new].set(jnp.asarray(c)),
+                cache, content)
+            self.ref[new] = 0
+            self._prefix[key] = new
+            self._block_key[new] = key
+            self._cached[new] = None
+            self._cached.move_to_end(new)
+            imported += 1
+        if imported:
+            self.stats["imported_blocks"] += imported
+        return cache
 
     # -- write-path maintenance ----------------------------------------------
 

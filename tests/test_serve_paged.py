@@ -385,3 +385,247 @@ def test_router_prefix_affinity(setup):
     assert router.stats["prefix_routed"] == 4
     router.run()
     assert router.prefix_skipped_tokens > 0
+
+
+# ---------------------------------------------------------------------------
+# preemption + KV-aware admission
+# ---------------------------------------------------------------------------
+
+
+def _drive_preempting(cfg, params, prompts, gen, **kw):
+    """Run ``prompts`` through a pool small enough to force at least one
+    preemption; returns (engine, {rid: out})."""
+    eng = ServeEngine(cfg, params, batch=2, max_len=16, paged=True,
+                      kv_block_size=4, kv_blocks=6, **kw)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_tokens=gen))
+    done = {r.rid: r.out for r in eng.run()}
+    return eng, done
+
+
+def test_preemption_resume_token_parity(setup):
+    """Mid-flight swap-out to host scratch and later swap-in must be
+    invisible in the tokens: every request — including the preempted
+    one — matches the lone-request greedy reference."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(10)
+    prompts = [rng.integers(0, cfg.vocab_size, 5 + i, dtype=np.int32)
+               for i in range(3)]
+    refs = [_greedy_reference(model, params, p, 6) for p in prompts]
+    eng, done = _drive_preempting(cfg, params, prompts, 6)
+    assert eng.preemptions > 0 and eng.resumes > 0
+    for i in range(3):
+        assert done[i] == refs[i]
+    assert eng.kv.live_blocks == 0            # pool fully drained
+    assert eng.kv.stats["swapped_out_blocks"] > 0
+    assert eng.kv.stats["swapped_in_blocks"] > 0
+
+
+def test_preemption_resume_pim_backend_parity(setup):
+    """Preemption composes with backend='pim': the same tight-pool drive
+    produces identical tokens through the compiled PIM executor."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab_size, 5 + i, dtype=np.int32)
+               for i in range(3)]
+    outs = {}
+    for backend in ("jit", "pim"):
+        eng, outs[backend] = _drive_preempting(cfg, params, prompts, 6,
+                                               backend=backend)
+        assert eng.preemptions > 0
+    assert outs["pim"] == outs["jit"]
+
+
+def test_kv_admission_completes_load_that_ooms_legacy(setup):
+    """The exact offered load that KVCacheOOMs slot-only admission must
+    complete, with zero OOM, under KV-aware admission + preemption."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(12)
+    prompts = [rng.integers(0, cfg.vocab_size, 16, dtype=np.int32)
+               for _ in range(6)]
+
+    def engine(**kw):
+        e = ServeEngine(cfg, params, batch=4, max_len=32, paged=True,
+                        kv_block_size=4, kv_blocks=12, **kw)
+        for i, p in enumerate(prompts):
+            e.submit(Request(rid=i, prompt=p, max_tokens=8))
+        return e
+
+    with pytest.raises(KVCacheOOM):
+        engine(admission="slot", preempt=False).run()
+    eng = engine(admission="kv", preempt=True)
+    done = eng.run()
+    assert len(done) == 6 and all(r.done for r in done)
+    # the controlled run matches the lone-request reference too
+    for r in done:
+        assert r.out == _greedy_reference(model, params, r.prompt, 8)
+
+
+def test_impossible_request_rejected_at_admission(setup):
+    """A request whose peak footprint exceeds the whole pool raises at
+    admission with a clear message — not after burning decode ticks."""
+    cfg, model, params = setup
+    eng = ServeEngine(cfg, params, batch=1, max_len=64, paged=True,
+                      kv_block_size=4, kv_blocks=4)
+    eng.submit(Request(rid=0, prompt=np.arange(20, dtype=np.int32) % 7,
+                       max_tokens=4))
+    with pytest.raises(KVCacheOOM, match="peak"):
+        eng.run()
+
+
+def test_request_exceeding_slot_table_rejected_at_admission(setup):
+    """A request whose peak footprint fits the pool but overflows a
+    single slot's block table (max_len) is equally impossible — it must
+    be rejected at admission, not mid-decode at the ensure() wall."""
+    cfg, model, params = setup
+    eng = ServeEngine(cfg, params, batch=2, max_len=32, paged=True,
+                      kv_block_size=4, kv_blocks=24)
+    eng.submit(Request(rid=0, prompt=np.arange(30, dtype=np.int32) % 7,
+                       max_tokens=31))
+    with pytest.raises(KVCacheOOM, match="peak"):
+        eng.run()
+
+
+def test_swap_roundtrip_restores_block_content():
+    """kv-level: swap_out copies every referenced block to host pages;
+    swap_in restores them bit-exactly into fresh blocks."""
+    kv = PagedKVCache(num_blocks=8, block_size=4, slots=2, max_len=16)
+    store = {"k": jnp.arange(8 * 4, dtype=jnp.float32).reshape(1, 8, 4)}
+    prompt = np.arange(9)
+    kv.alloc_slot(0, prompt)
+    for pos in range(9):
+        store = kv.ensure(store, 0, pos)
+        kv.note_filled(0, pos)
+    before = {bi: np.asarray(store["k"][0, int(kv.table[0, bi])]).copy()
+              for bi in range(3)}
+    pages = kv.swap_out(store, 0)
+    assert pages.n_blocks == 3 and kv._meta[0] is None
+    # dirty the pool so restored content provably comes from the pages
+    store = {"k": jnp.zeros_like(store["k"])}
+    kv._prefix.clear(); kv._block_key.clear()   # drop cached prefix too
+    kv._free.extend(kv._cached); kv._cached.clear()
+    store, shared = kv.swap_in(store, 1, prompt, pages)
+    assert shared == 0
+    for bi, want in before.items():
+        got = np.asarray(store["k"][0, int(kv.table[1, bi])])
+        assert (got == want).all()
+
+
+def test_export_import_prefix_roundtrip():
+    """kv-level prefix migration: an exported chain installs into a
+    second pool as evictable cached blocks with identical content."""
+    a = PagedKVCache(num_blocks=8, block_size=4, slots=1, max_len=16)
+    sa = {"k": jnp.arange(8 * 4, dtype=jnp.float32).reshape(1, 8, 4)}
+    prompt = np.arange(9)
+    a.alloc_slot(0, prompt)
+    for pos in range(9):
+        sa = a.ensure(sa, 0, pos)
+        a.note_filled(0, pos)
+    covered, pages = a.export_prefix(sa, prompt)
+    assert covered == 8 and len(pages) == 2
+
+    b = PagedKVCache(num_blocks=8, block_size=4, slots=1, max_len=16)
+    sb = {"k": jnp.zeros((1, 8, 4), jnp.float32)}
+    sb = b.import_prefix(sb, prompt, pages)
+    assert b.lookup_prefix(prompt) == 8
+    assert b.stats["imported_blocks"] == 2
+    assert b.cached_blocks == 2               # evictable, ref 0
+    sb = b.import_prefix(sb, prompt, pages)   # idempotent: chain present
+    assert b.stats["imported_blocks"] == 2
+    keys = a._chain_keys(prompt, 2)
+    for i, key in enumerate(keys):
+        ba, bb = a._prefix[key], b._prefix[key]
+        assert (np.asarray(sb["k"][0, bb])
+                == np.asarray(sa["k"][0, ba])).all()
+
+
+def test_router_prefix_transfer_migrates_and_stays_exact(setup):
+    """With prefix_transfer=True, a prefix cached on a loaded engine
+    migrates to the lighter one — and the migrated request's tokens
+    still match the lone-request reference (imported block content is
+    real KV, not garbage)."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(13)
+    prefix = rng.integers(0, cfg.vocab_size, 12, dtype=np.int32)
+    router = Router.replicated(cfg, params, 2, batch=1, max_len=32,
+                               paged=True, kv_block_size=4,
+                               prefix_transfer=True)
+    router.engines[0].submit(Request(rid=99, prompt=prefix, max_tokens=1))
+    router.engines[0].run()                   # warm engine 0's prefix
+    # pile queue depth onto engine 0 so affinity there costs more than
+    # the cached prefix saves
+    for i in range(4):
+        router.engines[0].submit(Request(
+            rid=50 + i, prompt=rng.integers(0, cfg.vocab_size, 8,
+                                            dtype=np.int32), max_tokens=8))
+    tail = rng.integers(0, cfg.vocab_size, 3, dtype=np.int32)
+    prompt = np.concatenate([prefix, tail])
+    req = Request(rid=0, prompt=prompt, max_tokens=4)
+    idx = router.submit(req)
+    assert idx == 1
+    assert router.stats["prefix_transferred"] == 1
+    assert router.stats["transferred_blocks"] > 0
+    assert router.engines[1].prefix_lookup(prompt) > 0
+    router.run()
+    assert req.out == _greedy_reference(model, params, prompt, 4)
+    # the migrated request skipped its prefix replay on engine 1
+    assert router.engines[1].prefix_skipped_tokens > 0
+
+
+def test_router_deterministic_tie_breaking(setup):
+    """Equal load + equal KV headroom always routes to the lowest
+    index; a KV-headroom edge breaks the tie toward the roomier pool."""
+    cfg, model, params = setup
+    req = Request(rid=0, prompt=np.arange(6, dtype=np.int32),
+                  max_tokens=2)
+    router = Router.replicated(cfg, params, 3, batch=1, max_len=16,
+                               paged=True, kv_block_size=4)
+    assert [router._depth_choice(req) for _ in range(3)] == [0, 0, 0]
+    # shrink engine 0's free pool (same pending work: zero) -> tie on
+    # score breaks toward engine 1's bigger headroom
+    router.engines[0].kv._free.pop()
+    assert router._depth_choice(req) == 1
+
+
+def test_router_starvation_propagates(setup):
+    """An engine that cannot progress leaves its pending rids in
+    Router.starved (return mode) / the raised message (raise mode)."""
+    cfg, model, params = setup
+    router = Router.replicated(cfg, params, 2, batch=1, max_len=8)
+    router.submit(Request(rid=3, prompt=np.arange(3, dtype=np.int32),
+                          max_tokens=50))
+    with pytest.raises(RuntimeError, match="pending"):
+        router.run()
+    assert router.starved == [3]
+    router2 = Router.replicated(cfg, params, 2, batch=1, max_len=8)
+    router2.submit(Request(rid=4, prompt=np.arange(3, dtype=np.int32),
+                           max_tokens=50))
+    router2.run(on_starvation="return")
+    assert router2.starved == [4]
+
+
+def test_router_stats_under_mixed_dispatch(setup):
+    """Prefix hits and depth routes account separately and per_engine
+    sums to the total submissions."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(14)
+    prefix = rng.integers(0, cfg.vocab_size, 12, dtype=np.int32)
+    router = Router.replicated(cfg, params, 2, batch=2, max_len=32,
+                               paged=True, kv_block_size=4)
+    router.engines[0].submit(Request(rid=99, prompt=prefix, max_tokens=1))
+    router.engines[0].run()
+    n_hit = n_miss = 0
+    for i in range(6):
+        if i % 2:
+            tail = rng.integers(0, cfg.vocab_size, 2, dtype=np.int32)
+            prompt = np.concatenate([prefix, tail])
+            n_hit += 1
+        else:
+            prompt = rng.integers(0, cfg.vocab_size, 6, dtype=np.int32)
+            n_miss += 1
+        router.submit(Request(rid=i, prompt=prompt, max_tokens=2))
+    assert router.stats["prefix_routed"] == n_hit
+    assert router.stats["depth_routed"] == n_miss
+    assert sum(router.stats["per_engine"]) == n_hit + n_miss
+    done = router.run()
+    assert {r.rid for r in done} >= set(range(6))
