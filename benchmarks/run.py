@@ -2,6 +2,7 @@
 
 Prints ``name,value,derived`` CSV rows. Usage:
     PYTHONPATH=src python -m benchmarks.run [module ...]
+    PYTHONPATH=src python -m benchmarks.run --only mod[,mod...]
 
 Exits non-zero if any registered benchmark raises, so CI can run the
 whole suite as a smoke test. Every ``BENCH_*.json`` artifact a run
@@ -40,6 +41,7 @@ MODULES = (
     "serve_bench",
     "quant_bench",
     "traffic_bench",
+    "kvquant_bench",
 )
 
 
@@ -75,8 +77,31 @@ def stamp_provenance(paths=None) -> list[str]:
     return stamped
 
 
+def _parse_args(argv: list[str]) -> list[str]:
+    """Positional module names, plus ``--only mod[,mod...]`` (or
+    ``--only=...``) as an explicit filter form — both select from
+    ``MODULES``; no arguments runs the whole suite."""
+    names = []
+    it = iter(argv)
+    for a in it:
+        if a == "--only":
+            a = next(it, None)
+            if a is None:
+                print("--only needs a module list", file=sys.stderr)
+                raise SystemExit(2)
+            names.extend(m for m in a.split(",") if m)
+        elif a.startswith("--only="):
+            names.extend(m for m in a[len("--only="):].split(",") if m)
+        elif a.startswith("-"):
+            print(f"unknown flag: {a}", file=sys.stderr)
+            raise SystemExit(2)
+        else:
+            names.append(a)
+    return names or list(MODULES)
+
+
 def main() -> None:
-    names = sys.argv[1:] or list(MODULES)
+    names = _parse_args(sys.argv[1:])
     unknown = [n for n in names if n not in MODULES]
     if unknown:
         print(f"unknown benchmark(s): {unknown}; have {list(MODULES)}",

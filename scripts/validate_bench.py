@@ -55,6 +55,12 @@ GATES = {
                        "goodput_ratio", "ttft_p95_ratio", "preemptions"],
         "oom_demo": ["baseline_ooms", "continuous_ooms", "completed"],
     },
+    "BENCH_kvquant": {
+        "capacity": ["pool_bytes", "block_ratio", "blocks_fp32"],
+        "fp32": ["goodput_per_tick", "preemptions"],
+        "fp8": ["goodput_per_tick", "goodput_ratio", "preemptions"],
+        "oom_demo": ["fp32_ooms", "fp8_ooms", "fp8_completed"],
+    },
 }
 
 

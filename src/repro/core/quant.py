@@ -331,3 +331,51 @@ def layer_error(w: jnp.ndarray, dtype: str | QuantSpec,
     amax = jnp.max(jnp.abs(w), axis=axis, keepdims=True)
     denom = jnp.maximum(amax, s.qmax * SCALE_FLOOR)
     return jnp.max(err / denom)
+
+
+# ---------------------------------------------------------------------------
+# per-vector code/scale split for the KV / activation datapath
+# ---------------------------------------------------------------------------
+
+
+def code_dtype(dtype: str | QuantSpec) -> jnp.dtype:
+    """Storage dtype of packed codes for a grid (f32 passthrough for fp32:
+    the fp32 "codes" are the values themselves, no scale needed)."""
+    s = spec(dtype)
+    if s.name == "fp32":
+        return jnp.dtype(jnp.float32)
+    if s.kind == "int":
+        return jnp.dtype(jnp.int8)
+    return jnp.dtype(jnp.uint8 if s.n_bits <= 8 else jnp.uint16)
+
+
+def quantize_kv(x: jnp.ndarray, dtype: str | QuantSpec):
+    """Split ``x ~= codes * scale`` with one absmax scale per *vector*
+    (the last axis — a (token, kv-head) head_dim slice in the paged KV
+    pool, so decode can rescale the single token it scatters without
+    touching the rest of the block).
+
+    Returns ``(codes, scale)``: int grids give int8 codes, float grids
+    packed sign|exp|mant codes (``decode_float``); ``scale`` is f32 with
+    a trailing keepdim. fp32 passes through (codes = x, scale = 1)."""
+    s = spec(dtype)
+    x = jnp.asarray(x, jnp.float32)
+    if s.name == "fp32":
+        return x, jnp.ones(x.shape[:-1] + (1,), jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax * s.inv_qmax, SCALE_FLOOR)
+    v = round_to_grid(x / scale, s)
+    if s.kind == "int":
+        return v.astype(jnp.int8), scale
+    return encode_float(v, s), scale
+
+
+def dequantize_kv(codes: jnp.ndarray, scale: jnp.ndarray,
+                  dtype: str | QuantSpec) -> jnp.ndarray:
+    """Inverse of :func:`quantize_kv` (f32 out; fp32 passthrough)."""
+    s = spec(dtype)
+    if s.name == "fp32":
+        return jnp.asarray(codes, jnp.float32)
+    v = (codes.astype(jnp.float32) if s.kind == "int"
+         else decode_float(codes, s))
+    return v * scale

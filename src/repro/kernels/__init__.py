@@ -13,19 +13,22 @@
   * ``paged_decode_attention_grouped`` — paged-KV decode attention for all
                                    batch slots in one launch, gathering KV
                                    blocks through a scalar-prefetched block
-                                   table
+                                   table (``..._q``: same launch over a
+                                   quantized pool, dequantize-on-load)
 
 ``ops`` holds the jit'd public wrappers; ``ref`` the pure-jnp oracles.
 """
 
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import (flash_attention,
-                                           paged_decode_attention_grouped)
+                                           paged_decode_attention_grouped,
+                                           paged_decode_attention_grouped_q)
 from repro.kernels.pim_fp import pim_fp32_mul
 from repro.kernels.pim_mac import (pim_mac, pim_mac_grouped, pim_matmul,
                                    pim_matmul_grouped,
                                    pim_matmul_grouped_q)
 
 __all__ = ["ops", "ref", "flash_attention", "paged_decode_attention_grouped",
+           "paged_decode_attention_grouped_q",
            "pim_fp32_mul", "pim_mac", "pim_mac_grouped", "pim_matmul",
            "pim_matmul_grouped", "pim_matmul_grouped_q"]

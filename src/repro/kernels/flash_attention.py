@@ -35,6 +35,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import quant
 from repro.kernels._compat import CompilerParams as _CompilerParams
 
 NEG_INF = -1e30
@@ -227,4 +228,105 @@ def paged_decode_attention_grouped(q: jnp.ndarray, k_store: jnp.ndarray,
         interpret=interpret,
     )(block_table.astype(jnp.int32), pos.astype(jnp.int32), qg, k_store,
       v_store)
+    return out.reshape(b, h, d)
+
+
+def _paged_decode_kernel_q(tbl_ref, pos_ref, q_ref, k_ref, ks_ref, v_ref,
+                           vs_ref, o_ref, acc_ref, m_ref, l_ref, *, bs: int,
+                           n_w: int, scale: float, kv_dtype: str):
+    b = pl.program_id(0)
+    w = pl.program_id(2)
+
+    @pl.when(w == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    p = pos_ref[b]
+
+    @pl.when(w * bs <= p)
+    def _compute():
+        q = q_ref[0, 0]                    # [R, D]
+        # dequantize on load: the streamed KV block is packed codes plus
+        # one f32 scale per token — the same decode the XLA oracle path
+        # runs, so grouped-vs-oracle stays bit-identical.
+        k = quant.dequantize_kv(k_ref[0, :, 0, :], ks_ref[0, :, 0, :],
+                                kv_dtype)
+        v = quant.dequantize_kv(v_ref[0, :, 0, :], vs_ref[0, :, 0, :],
+                                kv_dtype)
+        sc = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        k_pos = w * bs + jax.lax.broadcasted_iota(jnp.int32, sc.shape, 1)
+        sc = jnp.where(k_pos <= p, sc, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, sc.max(axis=-1, keepdims=True))
+        pr = jnp.exp(sc - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + pr.sum(axis=-1, keepdims=True)
+        acc_ref[...] = (acc_ref[...] * alpha
+                        + jnp.dot(pr.astype(v.dtype), v,
+                                  preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(w == n_w - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-20)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("kv_dtype", "interpret"))
+def paged_decode_attention_grouped_q(q: jnp.ndarray, k_store: jnp.ndarray,
+                                     k_scale: jnp.ndarray,
+                                     v_store: jnp.ndarray,
+                                     v_scale: jnp.ndarray,
+                                     block_table: jnp.ndarray,
+                                     pos: jnp.ndarray, *, kv_dtype: str,
+                                     interpret: bool = True) -> jnp.ndarray:
+    """:func:`paged_decode_attention_grouped` over a *quantized* KV pool.
+
+    k/v_store hold packed absmax-scaled codes ([N, bs, G, D] int8 /
+    uint8 / uint16, see ``quant.quantize_kv``) and k/v_scale the
+    per-(token, kv-head) f32 scales ([N, bs, G, 1]); both stream through
+    the same scalar-prefetched block-table index maps, and the kernel
+    dequantizes each block on load with f32 score/softmax accumulation —
+    the activation-side mirror of ``pim_matmul_grouped_q``'s
+    dequantize-on-load weight path.
+    """
+    b, h, d = q.shape
+    n_blocks, bs, g, _ = k_store.shape
+    w = block_table.shape[1]
+    rep = h // g
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, g, rep, d)
+
+    kv_map = lambda ib, ig, iw, tbl, pos: (tbl[ib, iw], 0, ig, 0)
+    out = pl.pallas_call(
+        functools.partial(_paged_decode_kernel_q, bs=bs, n_w=w, scale=scale,
+                          kv_dtype=quant.spec(kv_dtype).name),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b, g, w),
+            in_specs=[
+                pl.BlockSpec((1, 1, rep, d),
+                             lambda ib, ig, iw, tbl, pos: (ib, ig, 0, 0)),
+                pl.BlockSpec((1, bs, 1, d), kv_map),
+                pl.BlockSpec((1, bs, 1, 1), kv_map),
+                pl.BlockSpec((1, bs, 1, d), kv_map),
+                pl.BlockSpec((1, bs, 1, 1), kv_map),
+            ],
+            out_specs=pl.BlockSpec((1, 1, rep, d),
+                                   lambda ib, ig, iw, tbl, pos:
+                                   (ib, ig, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((rep, d), jnp.float32),
+                pltpu.VMEM((rep, 1), jnp.float32),
+                pltpu.VMEM((rep, 1), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, g, rep, d), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), pos.astype(jnp.int32), qg, k_store,
+      k_scale, v_store, v_scale)
     return out.reshape(b, h, d)

@@ -44,6 +44,7 @@ def map_arch(name: str, kind: str = "train", *, seq_len: int = 128,
              policy: placement_mod.PlacementPolicy | None = None,
              tech: str = "proposed",
              weight_dtype: str = "fp32",
+             act_dtype: str = "fp32",
              ideal_provision: str = "fp32",
              partitions: int | None = None,
              expand_scans: bool = False,
@@ -81,7 +82,8 @@ def map_arch(name: str, kind: str = "train", *, seq_len: int = 128,
         return schedule_mod.build_schedule(
             step, p_shapes, o_shapes, b_shapes,
             hierarchy=hierarchy, policy=policy, tech=tech,
-            weight_dtype=weight_dtype, ideal_provision=ideal_provision,
+            weight_dtype=weight_dtype, act_dtype=act_dtype,
+            ideal_provision=ideal_provision,
             partitions=partitions, expand_scans=expand_scans,
             expand_budget=expand_budget)
     if kind == "serve":
@@ -91,7 +93,8 @@ def map_arch(name: str, kind: str = "train", *, seq_len: int = 128,
         return schedule_mod.build_schedule(
             step, p_shapes, c_shapes, token, pos,
             hierarchy=hierarchy, policy=policy, tech=tech,
-            weight_dtype=weight_dtype, ideal_provision=ideal_provision,
+            weight_dtype=weight_dtype, act_dtype=act_dtype,
+            ideal_provision=ideal_provision,
             partitions=partitions, expand_scans=expand_scans,
             expand_budget=expand_budget)
     raise ValueError(f"kind must be 'train' or 'serve', got {kind!r}")
@@ -102,6 +105,7 @@ def map_lenet(kind: str = "serve", *, batch: int = 4, lr: float = 0.05,
               policy: placement_mod.PlacementPolicy | None = None,
               tech: str = "proposed",
               weight_dtype: str = "fp32",
+              act_dtype: str = "fp32",
               ideal_provision: str = "fp32",
               partitions: int | None = None,
               expand_scans: bool = False) -> schedule_mod.Schedule:
@@ -119,7 +123,8 @@ def map_lenet(kind: str = "serve", *, batch: int = 4, lr: float = 0.05,
         return schedule_mod.build_schedule(
             lenet.lenet_apply, _abstract(params), images,
             hierarchy=hierarchy, policy=policy, tech=tech,
-            weight_dtype=weight_dtype, ideal_provision=ideal_provision,
+            weight_dtype=weight_dtype, act_dtype=act_dtype,
+            ideal_provision=ideal_provision,
             partitions=partitions, expand_scans=expand_scans)
     if kind == "train":
         labels = jax.ShapeDtypeStruct((batch,), jnp.int32)
@@ -133,7 +138,8 @@ def map_lenet(kind: str = "serve", *, batch: int = 4, lr: float = 0.05,
         return schedule_mod.build_schedule(
             train_step, _abstract(params), images, labels,
             hierarchy=hierarchy, policy=policy, tech=tech,
-            weight_dtype=weight_dtype, ideal_provision=ideal_provision,
+            weight_dtype=weight_dtype, act_dtype=act_dtype,
+            ideal_provision=ideal_provision,
             partitions=partitions, expand_scans=expand_scans)
     raise ValueError(f"kind must be 'train' or 'serve', got {kind!r}")
 
@@ -143,6 +149,7 @@ def compile_arch(name: str, kind: str = "train", *, seq_len: int = 128,
                  hierarchy: PIMHierarchy | None = None,
                  policy: placement_mod.PlacementPolicy | None = None,
                  tech: str = "proposed", weight_dtype: str = "fp32",
+                 act_dtype: str = "fp32",
                  block: int = 128,
                  interpret: bool = True, partitions: int | None = None,
                  expand_scans: bool = False, devices=None):
@@ -152,7 +159,7 @@ def compile_arch(name: str, kind: str = "train", *, seq_len: int = 128,
     async pipeline driver)."""
     sched = map_arch(name, kind, seq_len=seq_len, batch=batch, smoke=smoke,
                      hierarchy=hierarchy, policy=policy, tech=tech,
-                     weight_dtype=weight_dtype,
+                     weight_dtype=weight_dtype, act_dtype=act_dtype,
                      partitions=partitions, expand_scans=expand_scans)
     if partitions:
         return compile_mod.compile_partitioned(sched, block=block,
@@ -166,6 +173,7 @@ def compile_lenet(kind: str = "serve", *, batch: int = 4, lr: float = 0.05,
                   hierarchy: PIMHierarchy | None = None,
                   policy: placement_mod.PlacementPolicy | None = None,
                   tech: str = "proposed", weight_dtype: str = "fp32",
+                  act_dtype: str = "fp32",
                   block: int = 128,
                   interpret: bool = True, partitions: int | None = None,
                   devices=None):
@@ -174,7 +182,7 @@ def compile_lenet(kind: str = "serve", *, batch: int = 4, lr: float = 0.05,
     ``devices`` pins stages for the async pipeline driver)."""
     sched = map_lenet(kind, batch=batch, lr=lr, hierarchy=hierarchy,
                       policy=policy, tech=tech, weight_dtype=weight_dtype,
-                      partitions=partitions)
+                      act_dtype=act_dtype, partitions=partitions)
     if partitions:
         return compile_mod.compile_partitioned(sched, block=block,
                                                interpret=interpret,

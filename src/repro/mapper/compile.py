@@ -173,6 +173,7 @@ def _program_key(schedule: Schedule, block: int, interpret: bool,
     # get distinct keys; the stage device assignment is part of the key
     # too — same cut on different device rings is a different program
     return (fn_key, avals, schedule.placement.signature(),
+            getattr(schedule, "act_bits", 32),
             block, interpret, group, fuse, boundaries,
             tuple(str(d) for d in devices))
 

@@ -42,6 +42,7 @@ from typing import Callable
 from repro import obs
 from repro.core import accelerator as acc_mod
 from repro.core import estimator
+from repro.core import quant
 from repro.mapper import graph as graph_mod
 from repro.mapper import placement as placement_mod
 from repro.mapper.hardware import PIMHierarchy, default_hierarchy
@@ -193,6 +194,8 @@ class Schedule:
     kv_placement: "placement_mod.KVPlacement | None" = None
     kv: KVTraffic | None = None
     ideal_provision: str = "fp32"   # lane-provisioning basis of the ideal
+    act_bits: int = 32              # activation transfer width (ACT_BITS
+                                    # resolved per schedule via act_dtype)
 
     @property
     def partitions(self) -> list[placement_mod.GraphPartition] | None:
@@ -321,7 +324,7 @@ class Schedule:
             node = self.graph.nodes[s.node]
             for d in node.deps:
                 dep = self.graph.nodes[d]
-                bits = dep.out_elems * dep.repeat * ACT_BITS
+                bits = dep.out_elems * dep.repeat * self.act_bits
                 if bits:
                     for link in self.hierarchy.route_links(homes[d],
                                                            homes[s.node]):
@@ -368,8 +371,11 @@ class Schedule:
             bottleneck=bottleneck)
 
 
-# Activations stream between subarrays at full precision regardless of
-# the stored-weight grid — only *weights* are quantized in-array.
+# Default activation stream width between subarrays. A schedule built
+# with ``act_dtype`` other than fp32 resolves its own ``Schedule.act_bits``
+# from the quant grid and prices every inter-subarray transfer at that
+# width; this constant stays the fp32 default and the fp32-equivalent
+# *area* basis used by ``_provision_bits``.
 ACT_BITS = 32
 
 
@@ -430,8 +436,10 @@ def build_schedule_from_graph(
         partitions: int | None = None,
         expand_scans: bool = False,
         expand_budget: int | None = None,
-        ideal_provision: str = "fp32") -> Schedule:
+        ideal_provision: str = "fp32",
+        act_dtype: str = "fp32") -> Schedule:
     hierarchy = hierarchy or default_hierarchy(tech)
+    act_bits = quant.spec(act_dtype).n_bits
     if expand_scans:
         sub_ = hierarchy.subarray
         budget = (expand_budget if expand_budget is not None
@@ -470,7 +478,7 @@ def build_schedule_from_graph(
         t_xfer, e_xfer, hops = 0.0, 0.0, 0
         for d in node.deps:
             dep = graph.nodes[d]
-            bits = dep.out_elems * dep.repeat * ACT_BITS
+            bits = dep.out_elems * dep.repeat * act_bits
             t, e = hierarchy.transfer_cost(bits, homes[d], home)
             t_xfer += t
             e_xfer += e
@@ -505,7 +513,7 @@ def build_schedule_from_graph(
     )
     return Schedule(graph=graph, placement=place, hierarchy=hierarchy,
                     stages=stages, report=report,
-                    ideal_provision=ideal_provision)
+                    ideal_provision=ideal_provision, act_bits=act_bits)
 
 
 def build_schedule(fn: Callable, *args,
@@ -513,6 +521,7 @@ def build_schedule(fn: Callable, *args,
                    policy: placement_mod.PlacementPolicy | None = None,
                    tech: str = "proposed",
                    weight_dtype: str = "fp32",
+                   act_dtype: str = "fp32",
                    partitions: int | None = None,
                    expand_scans: bool = False,
                    expand_budget: int | None = None,
@@ -527,6 +536,10 @@ def build_schedule(fn: Callable, *args,
     occupy fewer cells per row, MACs run a shorter bit-serial schedule,
     and the placer spends the freed area on extra replicas of the
     hottest nodes (lane provisioning stays at the fp32-equivalent area).
+    ``act_dtype`` prices inter-subarray *activation* transfers at the
+    grid's width (``Schedule.act_bits``; storage/compute numerics are
+    untouched — reducing transfer bits only shrinks ``t_transfer_s``, so
+    ``latency >= ideal`` still holds and op counts are unchanged).
     ``ideal_provision`` picks the footprint the *ideal* bound provisions
     lanes from: ``"fp32"`` (default, fp32-equivalent area) or
     ``"quantized"`` (the stored dtype's denser footprint — the ideal a
@@ -553,9 +566,11 @@ def build_schedule(fn: Callable, *args,
                                           partitions=partitions,
                                           expand_scans=expand_scans,
                                           expand_budget=expand_budget,
-                                          ideal_provision=ideal_provision)
+                                          ideal_provision=ideal_provision,
+                                          act_dtype=act_dtype)
     m = obs.metrics()
     m.counter("mapper.schedules_built").inc()
     m.gauge("mapper.last_modeled_latency_s").set(sched.report.latency_s)
     m.gauge("pim.weight_bits").set(float(hierarchy.subarray.n_bits))
+    m.gauge("pim.act_bits").set(float(sched.act_bits))
     return sched

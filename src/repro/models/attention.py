@@ -21,6 +21,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.core import quant
 from repro.models import layers
 from repro.parallel import sharding
 
@@ -336,18 +337,35 @@ def decode_attention(x, params, cfg, cache: dict, pos: jnp.ndarray):
 
 
 def init_paged_kv_cache(num_blocks: int, block_size: int, n_kv: int,
-                        head_dim: int, dtype):
+                        head_dim: int, dtype, kv_dtype: str = "fp32"):
     """One attention site's share of the paged KV pool: position ``p`` of a
-    slot lives at ``[table[p // block_size], p % block_size]``."""
+    slot lives at ``[table[p // block_size], p % block_size]``.
+
+    ``kv_dtype`` other than fp32 stores packed absmax-scaled codes
+    (``quant.quantize_kv``) with one f32 scale per (token, kv-head)
+    vector riding in ``k_scale`` / ``v_scale`` leaves. Scales keep the
+    block axis at position 1, so every allocator device op (CoW copy,
+    swap, prefix export/import) round-trips codes+scales together."""
+    shape = (num_blocks, block_size, n_kv, head_dim)
+    if quant.spec(kv_dtype).name == "fp32":
+        return {
+            "k": jnp.zeros(shape, dtype),
+            "v": jnp.zeros(shape, dtype),
+        }
+    ct = quant.code_dtype(kv_dtype)
+    sshape = (num_blocks, block_size, n_kv, 1)
     return {
-        "k": jnp.zeros((num_blocks, block_size, n_kv, head_dim), dtype),
-        "v": jnp.zeros((num_blocks, block_size, n_kv, head_dim), dtype),
+        "k": jnp.zeros(shape, ct),
+        "k_scale": jnp.zeros(sshape, jnp.float32),
+        "v": jnp.zeros(shape, ct),
+        "v_scale": jnp.zeros(sshape, jnp.float32),
     }
 
 
 def paged_decode_attention(x, params, cfg, cache: dict,
                            block_table: jnp.ndarray, pos: jnp.ndarray, *,
-                           use_kernel: bool = False):
+                           use_kernel: bool = False,
+                           kv_dtype: str = "fp32"):
     """x: [B, 1, D]; cache k/v: [num_blocks, block_size, G, hd];
     block_table: [B, W] physical block per logical block (invalid entries
     clamped to the scratch block); pos: [B] per-slot current length.
@@ -365,11 +383,18 @@ def paged_decode_attention(x, params, cfg, cache: dict,
     scalar-prefetched block table instead of a materialized
     ``[B, W*bs, G, hd]`` XLA gather. The XLA path below stays the
     numerics oracle.
+
+    ``kv_dtype`` other than fp32 quantizes the new token's K/V on
+    scatter (codes + per-(token, head) scales, see
+    ``init_paged_kv_cache``) and dequantizes on gather; scores and
+    softmax accumulate in f32 either way. fp32 is the untouched
+    original path, bit-identical storage included.
     """
     b = x.shape[0]
     hd = cfg.resolved_head_dim
     bs = cache["k"].shape[1]
     w = block_table.shape[1]
+    quantized = quant.spec(kv_dtype).name != "fp32"
     if cfg.rope_style == "mrope":
         positions = jnp.broadcast_to(pos[None, :, None], (3, b, 1))
     else:
@@ -377,17 +402,49 @@ def paged_decode_attention(x, params, cfg, cache: dict,
     q, k_new, v_new = _project_qkv(x, params, cfg, positions)
     blk = block_table[jnp.arange(b), pos // bs]            # [B] tail blocks
     off = pos % bs
-    k_store = cache["k"].at[blk, off].set(k_new[:, 0].astype(cache["k"].dtype))
-    v_store = cache["v"].at[blk, off].set(v_new[:, 0].astype(cache["v"].dtype))
+    if quantized:
+        k_codes, k_sc = quant.quantize_kv(k_new[:, 0], kv_dtype)
+        v_codes, v_sc = quant.quantize_kv(v_new[:, 0], kv_dtype)
+        new_cache = {
+            "k": cache["k"].at[blk, off].set(
+                k_codes.astype(cache["k"].dtype)),
+            "k_scale": cache["k_scale"].at[blk, off].set(k_sc),
+            "v": cache["v"].at[blk, off].set(
+                v_codes.astype(cache["v"].dtype)),
+            "v_scale": cache["v_scale"].at[blk, off].set(v_sc),
+        }
+    else:
+        new_cache = {
+            "k": cache["k"].at[blk, off].set(
+                k_new[:, 0].astype(cache["k"].dtype)),
+            "v": cache["v"].at[blk, off].set(
+                v_new[:, 0].astype(cache["v"].dtype)),
+        }
+    k_store, v_store = new_cache["k"], new_cache["v"]
     if use_kernel:
-        from repro.kernels.flash_attention import \
-            paged_decode_attention_grouped
-        att = paged_decode_attention_grouped(q[:, 0], k_store, v_store,
-                                             block_table, pos)
+        from repro.kernels.flash_attention import (
+            paged_decode_attention_grouped,
+            paged_decode_attention_grouped_q)
+        if quantized:
+            att = paged_decode_attention_grouped_q(
+                q[:, 0], k_store, new_cache["k_scale"],
+                v_store, new_cache["v_scale"], block_table, pos,
+                kv_dtype=quant.spec(kv_dtype).name)
+        else:
+            att = paged_decode_attention_grouped(q[:, 0], k_store, v_store,
+                                                 block_table, pos)
         out = att.reshape(b, 1, cfg.n_heads * hd) @ params["wo"]
-        return out, {"k": k_store, "v": v_store}
-    k = k_store[block_table].reshape(b, w * bs, cfg.n_kv_heads, hd)
-    v = v_store[block_table].reshape(b, w * bs, cfg.n_kv_heads, hd)
+        return out, new_cache
+    if quantized:
+        k = quant.dequantize_kv(k_store[block_table],
+                                new_cache["k_scale"][block_table], kv_dtype)
+        v = quant.dequantize_kv(v_store[block_table],
+                                new_cache["v_scale"][block_table], kv_dtype)
+        k = k.reshape(b, w * bs, cfg.n_kv_heads, hd)
+        v = v.reshape(b, w * bs, cfg.n_kv_heads, hd)
+    else:
+        k = k_store[block_table].reshape(b, w * bs, cfg.n_kv_heads, hd)
+        v = v_store[block_table].reshape(b, w * bs, cfg.n_kv_heads, hd)
     g = cfg.n_kv_heads
     qg = _grouped(q, g)                                    # [B,1,G,R,D]
     scores = (jnp.einsum("bqgrd,bkgd->bgrqk", qg, k).astype(jnp.float32)
@@ -397,12 +454,12 @@ def paged_decode_attention(x, params, cfg, cache: dict,
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bgrqk,bkgd->bqgrd", probs, v)
     out = out.reshape(b, 1, cfg.n_heads * hd) @ params["wo"]
-    return out, {"k": k_store, "v": v_store}
+    return out, new_cache
 
 
 def paged_prefill_attention(x, params, cfg, cache: dict,
                             table_row: jnp.ndarray, p0: jnp.ndarray,
-                            n_new: jnp.ndarray):
+                            n_new: jnp.ndarray, *, kv_dtype: str = "fp32"):
     """Whole-prompt attention for one slot over the paged pool.
 
     x: [1, T, D] — T new prompt tokens (padded; entries past ``n_new``
@@ -423,6 +480,7 @@ def paged_prefill_attention(x, params, cfg, cache: dict,
     hd = cfg.resolved_head_dim
     bs = cache["k"].shape[1]
     w = table_row.shape[0]
+    quantized = quant.spec(kv_dtype).name != "fp32"
     gpos = p0 + jnp.arange(t)                              # [T] global pos
     if cfg.rope_style == "mrope":
         positions = jnp.broadcast_to(gpos[None, None], (3, 1, t))
@@ -434,11 +492,32 @@ def paged_prefill_attention(x, params, cfg, cache: dict,
     # scatter, garbage never lands in live blocks
     blk = jnp.where(new_valid, table_row[jnp.clip(gpos // bs, 0, w - 1)], 0)
     off = jnp.where(new_valid, gpos % bs, 0)
-    k_store = cache["k"].at[blk, off].set(k_new[0].astype(cache["k"].dtype))
-    v_store = cache["v"].at[blk, off].set(v_new[0].astype(cache["v"].dtype))
+    if quantized:
+        k_codes, k_sc = quant.quantize_kv(k_new[0], kv_dtype)
+        v_codes, v_sc = quant.quantize_kv(v_new[0], kv_dtype)
+        new_cache = {
+            "k": cache["k"].at[blk, off].set(
+                k_codes.astype(cache["k"].dtype)),
+            "k_scale": cache["k_scale"].at[blk, off].set(k_sc),
+            "v": cache["v"].at[blk, off].set(
+                v_codes.astype(cache["v"].dtype)),
+            "v_scale": cache["v_scale"].at[blk, off].set(v_sc),
+        }
+        k = quant.dequantize_kv(new_cache["k"][table_row],
+                                new_cache["k_scale"][table_row], kv_dtype)
+        v = quant.dequantize_kv(new_cache["v"][table_row],
+                                new_cache["v_scale"][table_row], kv_dtype)
+    else:
+        new_cache = {
+            "k": cache["k"].at[blk, off].set(
+                k_new[0].astype(cache["k"].dtype)),
+            "v": cache["v"].at[blk, off].set(
+                v_new[0].astype(cache["v"].dtype)),
+        }
+        k, v = new_cache["k"][table_row], new_cache["v"][table_row]
     g = cfg.n_kv_heads
-    k = k_store[table_row].reshape(1, w * bs, g, hd)
-    v = v_store[table_row].reshape(1, w * bs, g, hd)
+    k = k.reshape(1, w * bs, g, hd)
+    v = v.reshape(1, w * bs, g, hd)
     qg = _grouped(q, g)                                    # [1,T,G,R,D]
     scores = (jnp.einsum("bqgrd,bkgd->bgrqk", qg, k).astype(jnp.float32)
               / math.sqrt(hd))
@@ -449,7 +528,32 @@ def paged_prefill_attention(x, params, cfg, cache: dict,
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bgrqk,bkgd->bqgrd", probs, v)
     out = out.reshape(1, t, cfg.n_heads * hd) @ params["wo"]
-    return out, {"k": k_store, "v": v_store}
+    return out, new_cache
+
+
+def paged_kv_dequant_error(store: dict, ref: dict,
+                           kv_dtype: str) -> jnp.ndarray:
+    """Measured KV dequantization error of a quantized paged store
+    against its fp32 golden twin: max over written entries of
+    ``|dequant(codes, scale) - ref| / per-(token, head) absmax`` —
+    directly comparable to ``quant.layer_error_budget(kv_dtype)``.
+
+    Leaves are the transformer's stacked
+    ``[n_units, num_blocks, block_size, G, head_dim]``; returns one
+    scalar per unit (``[n_units]`` f32, zeros for fp32 stores).
+    Unwritten entries are zero in both stores and contribute 0."""
+    s = quant.spec(kv_dtype)
+    errs = []
+    for name in ("k", "v"):
+        refv = jnp.asarray(ref[name], jnp.float32)
+        if s.name == "fp32":
+            dq = jnp.asarray(store[name], jnp.float32)
+        else:
+            dq = quant.dequantize_kv(store[name], store[name + "_scale"], s)
+        amax = jnp.max(jnp.abs(refv), axis=-1, keepdims=True)
+        rel = jnp.abs(dq - refv) / jnp.maximum(amax, 1e-20)
+        errs.append(jnp.max(rel, axis=tuple(range(1, refv.ndim))))
+    return jnp.maximum(errs[0], errs[1])
 
 
 # ---------------------------------------------------------------------------

@@ -319,12 +319,15 @@ class DecoderLM:
             cache["tail"] = stack(m_proto, self.layout.tail_units)
         return cache
 
-    def init_paged_cache(self, num_blocks: int, block_size: int) -> dict:
+    def init_paged_cache(self, num_blocks: int, block_size: int,
+                         kv_dtype: str = "fp32") -> dict:
         """Paged KV storage shared by all slots: per attention site,
         ``[num_blocks, block_size, n_kv, head_dim]`` (block axis addressed
-        through per-slot block tables — see ``repro.serve.kv``). Only the
-        ``attn`` pattern pages: recurrent patterns carry O(1) state per
-        slot, so there is nothing to page."""
+        through per-slot block tables — see ``repro.serve.kv``;
+        ``kv_dtype`` other than fp32 adds per-(token, head) scale leaves,
+        see ``attention.init_paged_kv_cache``). Only the ``attn`` pattern
+        pages: recurrent patterns carry O(1) state per slot, so there is
+        nothing to page."""
         cfg = self.cfg
         if cfg.block_pattern != "attn":
             raise NotImplementedError(
@@ -334,7 +337,8 @@ class DecoderLM:
         hd = cfg.resolved_head_dim
         n = max(cfg.moe_interleave, 1) if cfg.n_experts else 1
         proto = {f"block{i}": attention.init_paged_kv_cache(
-            num_blocks, block_size, cfg.n_kv_heads, hd, dt)
+            num_blocks, block_size, cfg.n_kv_heads, hd, dt,
+            kv_dtype=kv_dtype)
             for i in range(n)}
         stacked = jax.tree.map(
             lambda a: jnp.repeat(a[None], self.layout.n_units, axis=0),
@@ -342,13 +346,14 @@ class DecoderLM:
         return {"layers": stacked}
 
     def decode_step_paged(self, params, cache, token, block_table, pos, *,
-                          kernel: bool = False):
+                          kernel: bool = False, kv_dtype: str = "fp32"):
         """Paged counterpart of ``decode_step``: token [B] int32;
         block_table [B, W] int32; pos [B] int32 *per-slot* positions
         (recycled slots restart at 0 — no shared tick). Returns
         (logits [B, V], cache). ``kernel=True`` runs every site's
         gather+attention through the grouped paged Pallas kernel (one
-        launch per site for all slots) instead of the XLA gather path."""
+        launch per site for all slots) instead of the XLA gather path;
+        ``kv_dtype`` must match the cache's storage grid."""
         cfg = self.cfg
         if cfg.block_pattern != "attn":
             raise NotImplementedError(
@@ -365,7 +370,7 @@ class DecoderLM:
                 h = layers.rms_norm(xc, bp["norm1"], cfg.norm_eps)
                 att, kv = attention.paged_decode_attention(
                     h, bp["attn"], cfg, uc[f"block{i}"], block_table, pos,
-                    use_kernel=kernel)
+                    use_kernel=kernel, kv_dtype=kv_dtype)
                 xc = xc + att
                 new_c[f"block{i}"] = kv
                 h = layers.rms_norm(xc, bp["norm2"], cfg.norm_eps)
@@ -381,7 +386,8 @@ class DecoderLM:
         logits = self._logits(params, x)
         return logits[:, 0], {"layers": new_cache}
 
-    def prefill_paged(self, params, cache, tokens, table_row, p0, n_new):
+    def prefill_paged(self, params, cache, tokens, table_row, p0, n_new, *,
+                      kv_dtype: str = "fp32"):
         """Admit a prompt by writing whole KV blocks in one shot.
 
         tokens: [T] int32 — the uncached prompt tokens (padded to a
@@ -408,7 +414,7 @@ class DecoderLM:
                 h = layers.rms_norm(xc, bp["norm1"], cfg.norm_eps)
                 att, kv = attention.paged_prefill_attention(
                     h, bp["attn"], cfg, uc[f"block{i}"], table_row, p0,
-                    n_new)
+                    n_new, kv_dtype=kv_dtype)
                 xc = xc + att
                 new_c[f"block{i}"] = kv
                 h = layers.rms_norm(xc, bp["norm2"], cfg.norm_eps)

@@ -58,6 +58,9 @@ class DriftReport:
     measured_total_s: float       # outermost run span (fallback: node sum)
     ratio: float                  # measured_total / modeled_total
     kv_modeled_s: float = 0.0     # attached KVTraffic.t_s (0 if none)
+    kv_dequant_error: dict | None = None  # serve.kv_dequant_rel_error
+    #                               histogram snapshot (None if the engine
+    #                               never recorded a dequant-error pass)
 
     @property
     def n_measured(self) -> int:
@@ -90,6 +93,7 @@ class DriftReport:
             "measured_total_s": self.measured_total_s,
             "ratio": self.ratio,
             "kv_modeled_s": self.kv_modeled_s,
+            "kv_dequant_error": self.kv_dequant_error,
             "nodes": [dataclasses.asdict(n) for n in self.nodes],
         }
 
@@ -147,11 +151,17 @@ def drift_report(schedule: Any, tracer: Tracer | None = None) -> DriftReport:
     measured_total = (sum(s.dur_s for s in runs) if runs
                       else sum(measured.values()))
     modeled_total = schedule.report.latency_s
+    # snapshot (never create) the serving engine's KV dequant-error
+    # histogram so quantized-KV runs carry their numerics in the report
+    from repro import obs
+    kv_err = obs.metrics().snapshot()["histograms"].get(
+        "serve.kv_dequant_rel_error")
     return DriftReport(
         tech=schedule.report.tech, nodes=tuple(nodes),
         modeled_total_s=modeled_total, measured_total_s=measured_total,
         ratio=_ratio(measured_total, modeled_total),
-        kv_modeled_s=schedule.kv.t_s if schedule.kv is not None else 0.0)
+        kv_modeled_s=schedule.kv.t_s if schedule.kv is not None else 0.0,
+        kv_dequant_error=kv_err)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -37,6 +37,7 @@ reported as starvation.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 import time
 from collections import deque
@@ -48,7 +49,9 @@ import numpy as np
 
 from repro import obs
 from repro.configs.base import ArchConfig
+from repro.core import quant
 from repro.models.transformer import DecoderLM, build_model
+from repro.serve import kv as kv_mod
 from repro.serve.kv import KVCacheOOM, PagedKVCache
 
 
@@ -58,6 +61,10 @@ class Request:
     prompt: np.ndarray              # [L] int32
     max_tokens: int = 16
     eos: int | None = None
+    # SLO class: preemption victims are picked from the *lowest* class
+    # first (youngest admission within a class); the default 0 for every
+    # request preserves plain youngest-first
+    priority: int = 0
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
     # wall-clock stamps (time.monotonic): submit / first generated token /
@@ -112,7 +119,9 @@ class ServeEngine:
                  expand_scans: bool = False,
                  scheduler: str = "continuous",
                  admission: str | None = None,
-                 preempt: bool = True):
+                 preempt: bool = True,
+                 kv_dtype: str = "fp32",
+                 act_dtype: str = "fp32"):
         """``backend="jit"`` jits the decode step; ``backend="pim"`` maps
         it onto the PIM hierarchy and decodes through the compiled
         schedule (``repro.mapper.compile``) — placed matmuls run as
@@ -156,7 +165,20 @@ class ServeEngine:
         / ``fp16``): weights pack denser per subarray, the freed area
         becomes extra throughput replicas of the hottest layers, and
         placed matmuls dequantize on load with fp32 accumulation
-        (``repro.core.quant``). Activations and the KV pool stay fp32.
+        (``repro.core.quant``).
+
+        ``kv_dtype`` (paged only) stores the KV pool on a reduced grid:
+        packed absmax-scaled codes plus one f32 scale per (token,
+        kv-head) vector (``quant.quantize_kv``), dequantized on gather
+        with f32 score accumulation. The same pool bytes hold ~2-4x more
+        blocks — pass the equal-bytes block count via ``kv_blocks``
+        (see ``repro.serve.kv.blocks_for_bytes``) to convert that into
+        ``admission="kv"`` headroom. Swap/CoW/prefix-share round-trip
+        codes+scales bit-exactly; on the pim backend KV traffic is
+        priced at the reduced width. ``act_dtype`` (pim backend only)
+        prices inter-subarray activation transfers at a reduced width
+        (``Schedule.act_bits``); fp32 for both keeps today's paths
+        bit-identical.
 
         ``pim_compile`` forwards knobs to the schedule compiler (e.g.
         ``{"group": False, "fuse": False}`` for the legacy
@@ -217,6 +239,17 @@ class ServeEngine:
             raise ValueError(
                 "weight_dtype only applies to backend='pim' (the jit "
                 "backend has no placed weight grid to quantize)")
+        self.kv_dtype = quant.spec(kv_dtype).name
+        self.act_dtype = quant.spec(act_dtype).name
+        if self.kv_dtype != "fp32" and not paged:
+            raise ValueError(
+                "kv_dtype only applies to paged=True (the contiguous "
+                "lanes have no block pool to quantize)")
+        if self.act_dtype != "fp32" and backend != "pim":
+            raise ValueError(
+                "act_dtype only applies to backend='pim' (it prices the "
+                "schedule's inter-subarray transfers; the jit backend "
+                "has no modeled NoC)")
         if scheduler not in ("continuous", "static"):
             raise ValueError(f"scheduler must be 'continuous' or "
                              f"'static', got {scheduler!r}")
@@ -234,6 +267,7 @@ class ServeEngine:
         self.preempt = bool(preempt) and paged
         self.preemptions = 0
         self.resumes = 0
+        self.swapped_blocks = 0   # pages currently on host scratch
         self.weight_dtype = weight_dtype
         self.prefill = prefill
         self.attn_kernel = attn_kernel
@@ -247,9 +281,10 @@ class ServeEngine:
             if kv_blocks is None:
                 kv_blocks = 1 + batch * self.max_blocks
             self.kv: PagedKVCache | None = PagedKVCache(
-                kv_blocks, kv_block_size, batch, max_len)
-            self.cache = self.model.init_paged_cache(kv_blocks,
-                                                     kv_block_size)
+                kv_blocks, kv_block_size, batch, max_len,
+                kv_dtype=self.kv_dtype)
+            self.cache = self.model.init_paged_cache(
+                kv_blocks, kv_block_size, kv_dtype=self.kv_dtype)
         else:
             self.kv = None
             self.cache = self.model.init_cache(batch, max_len)
@@ -261,8 +296,14 @@ class ServeEngine:
             sites = self.model.layout.n_units * n
             itemsize = jnp.dtype(cfg.dtype).itemsize
             self._kv_sites = sites
-            self._tok_bytes = (sites * 2 * cfg.n_kv_heads
-                               * cfg.resolved_head_dim * itemsize)
+            if self.kv_dtype == "fp32":
+                self._tok_bytes = (sites * 2 * cfg.n_kv_heads
+                                   * cfg.resolved_head_dim * itemsize)
+            else:
+                # quantized pool: packed codes + per-(token, head) scales
+                self._tok_bytes = kv_mod.kv_token_bytes(
+                    cfg.n_kv_heads, cfg.resolved_head_dim, sites,
+                    self.kv_dtype)
         else:
             self._kv_sites = 0
             self._tok_bytes = 0
@@ -283,8 +324,10 @@ class ServeEngine:
         # per admitted prompt, retraced only per padded-length bucket.
         # Shared by both backends — decode ticks still run through the
         # backend's own program, so pim-vs-jit token parity is preserved.
-        self._prefill_fn = (jax.jit(self.model.prefill_paged)
-                            if paged and prefill == "batch" else None)
+        self._prefill_fn = (
+            jax.jit(functools.partial(self.model.prefill_paged,
+                                      kv_dtype=self.kv_dtype))
+            if paged and prefill == "batch" else None)
         self.completed: list[Request] = []
         self.starved: list[int] = []        # rids pending at last run() exit
         # per-slot decode state (persistent so tick_once can be driven
@@ -306,7 +349,6 @@ class ServeEngine:
                    microbatches: int,
                    weight_dtype: str = "fp32") -> None:
         from repro import mapper
-        from repro.mapper.schedule import ACT_BITS
         if self.paged:
             args = (mapper.abstract_like(self.params),
                     mapper.abstract_like(self.cache),
@@ -323,18 +365,19 @@ class ServeEngine:
             fn = self._decode_impl
         sched = mapper.build_schedule(
             fn, *args, tech=pim_tech, weight_dtype=weight_dtype,
+            act_dtype=self.act_dtype,
             partitions=partitions if partitions > 1 else None,
             expand_scans=self.expand_scans)
         if self.paged and self._kv_sites:
             # place the KV pool near its attention consumers and price
-            # its per-tick block reads/writes into the schedule
-            # KV entries are activations — priced at ACT_BITS even
-            # when the weight grid is quantized
+            # its per-tick block reads/writes into the schedule — at the
+            # pool's own storage width (codes + scales when quantized)
             spec = mapper.KVBlockSpec(
                 sites=self._kv_sites, num_blocks=self.kv.num_blocks,
                 block_size=self.block_size,
-                token_bits=2 * self.cfg.n_kv_heads
-                * self.cfg.resolved_head_dim * ACT_BITS)
+                token_bits=kv_mod.kv_token_bits(
+                    self.cfg.n_kv_heads, self.cfg.resolved_head_dim,
+                    self.kv_dtype))
             self.kv_placement = mapper.place_kv(sched.graph,
                                                 sched.placement, spec)
             sched.attach_kv(self.kv_placement,
@@ -370,7 +413,8 @@ class ServeEngine:
     def _decode_impl_paged(self, params, cache, tokens, block_table, pos):
         return self.model.decode_step_paged(params, cache, tokens,
                                             block_table, pos,
-                                            kernel=self.attn_kernel)
+                                            kernel=self.attn_kernel,
+                                            kv_dtype=self.kv_dtype)
 
     def submit(self, req: Request) -> None:
         if req.t_submit is None:      # router stamps before delegating
@@ -488,6 +532,7 @@ class ServeEngine:
         into the pool and restore the saved decode cursor — the next tick
         continues exactly where the swap-out interrupted."""
         st = req.resume
+        self.swapped_blocks -= st["pages"].n_blocks
         self.cache, _ = self.kv.swap_in(self.cache, s, req.prompt,
                                         st["pages"])
         self._pos[s] = st["pos"]
@@ -511,6 +556,7 @@ class ServeEngine:
                           last_tok=int(self._last_tok[s]))
         req.preemptions += 1
         self.preemptions += 1
+        self.swapped_blocks += pages.n_blocks
         obs.metrics().counter("serve.preempted").inc()
         tr = obs.tracer()
         if tr.enabled:
@@ -525,11 +571,14 @@ class ServeEngine:
 
     def _ensure_active(self, active: list[int]) -> list[int]:
         """Make every active slot's next position writable, swapping out
-        victims (youngest admission first) when the pool runs dry.
-        Returns the surviving active slots. With ``preempt=False`` the
-        allocator's ``KVCacheOOM`` propagates — the legacy behavior."""
-        # oldest admissions ensure first, so a victim is always younger
-        # than (or equal to) the slot that triggered the shortfall
+        victims when the pool runs dry: lowest ``priority`` class first,
+        youngest admission within a class — all-default priorities
+        reduce to plain youngest-first. Returns the surviving active
+        slots. With ``preempt=False`` the allocator's ``KVCacheOOM``
+        propagates — the legacy behavior."""
+        # oldest admissions ensure first, so a same-class victim is
+        # always younger than (or equal to) the slot that triggered the
+        # shortfall
         for s in sorted(active, key=lambda s: self._adm_seq[s]):
             while self.slots[s] is not None:
                 try:
@@ -543,8 +592,10 @@ class ServeEngine:
                                if v != s and self.slots[v] is not None]
                     if not victims:
                         raise
-                    self._preempt(max(victims,
-                                      key=lambda v: self._adm_seq[v]))
+                    self._preempt(max(
+                        victims,
+                        key=lambda v: (-self.slots[v].priority,
+                                       self._adm_seq[v])))
         return [s for s in active if self.slots[s] is not None]
 
     def _prefill_slot(self, s: int, req: Request, p0: int) -> None:
@@ -685,6 +736,7 @@ class ServeEngine:
             m.gauge("serve.kv_live_blocks").set(self.kv.live_blocks)
             m.gauge("serve.kv_cached_blocks").set(self.kv.cached_blocks)
             m.gauge("serve.kv_free_blocks").set(self.kv.free_blocks)
+            m.gauge("serve.kv_swapped_blocks").set(self.swapped_blocks)
         return True
 
     def run(self, max_ticks: int | None = None, *,
@@ -719,6 +771,35 @@ class ServeEngine:
                 f"(rids {self.starved}); raise max_ticks/max_len or pass "
                 f"on_starvation='return'")
         return self.completed
+
+    def kv_dequant_errors(self, ref) -> np.ndarray:
+        """Measured per-site KV dequantization error against a golden
+        fp32 twin: dequantize this engine's stored codes+scales and
+        compare to ``ref``'s fp32 pool entry-by-entry, relative to the
+        golden per-(token, head) absmax — directly comparable to
+        ``quant.layer_error_budget(self.kv_dtype)``. ``ref`` is a
+        ``ServeEngine`` (or its raw cache pytree) that ran the same
+        requests with ``kv_dtype="fp32"`` and the same ``kv_blocks`` (the
+        allocator is deterministic, so block trajectories match). Each
+        per-unit error is recorded into the
+        ``serve.kv_dequant_rel_error`` histogram (picked up by
+        ``drift_report``); returns the errors as a flat array."""
+        from repro.models import attention
+        if not self.paged:
+            raise ValueError("kv_dequant_errors requires paged=True")
+        ref_cache = ref.cache if isinstance(ref, ServeEngine) else ref
+        sites = self.cache["layers"]
+        ref_sites = ref_cache["layers"]
+        errs = []
+        for name in sorted(sites):
+            e = attention.paged_kv_dequant_error(
+                sites[name], ref_sites[name], self.kv_dtype)
+            errs.append(np.asarray(e, np.float32))
+        out = np.concatenate(errs)
+        h = obs.metrics().histogram("serve.kv_dequant_rel_error")
+        for v in out:
+            h.observe(float(v))
+        return out
 
     def drift_report(self, tracer=None):
         """Join recorded execute-lane spans against the pim schedule's

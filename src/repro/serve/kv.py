@@ -56,8 +56,46 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.core import quant
 
 SCRATCH_BLOCK = 0
+
+
+def kv_token_bits(n_kv: int, head_dim: int, kv_dtype: str = "fp32") -> int:
+    """Bits one token's K+V entries occupy at one attention site.
+
+    Quantized pools store ``head_dim`` packed codes plus one f32 absmax
+    scale per (token, kv-head) vector, for K and for V — the scale rides
+    alongside the codes in the same physical block, so it is charged
+    here too."""
+    s = quant.spec(kv_dtype)
+    if s.name == "fp32":
+        return 2 * n_kv * head_dim * 32
+    return 2 * n_kv * (head_dim * s.n_bits + 32)
+
+
+def kv_token_bytes(n_kv: int, head_dim: int, sites: int,
+                   kv_dtype: str = "fp32") -> int:
+    """Pool bytes one token occupies across all attention sites (code
+    arrays are padded to whole storage elements: int8/uint8 codes cost 1
+    byte, uint16 codes 2 — same as the device arrays)."""
+    s = quant.spec(kv_dtype)
+    if s.name == "fp32":
+        per_site = 2 * n_kv * head_dim * 4
+    else:
+        code_bytes = 1 if s.n_bits <= 8 else 2
+        per_site = 2 * n_kv * (head_dim * code_bytes + 4)
+    return sites * per_site
+
+
+def blocks_for_bytes(pool_bytes: int, block_size: int, n_kv: int,
+                     head_dim: int, sites: int,
+                     kv_dtype: str = "fp32") -> int:
+    """Physical blocks (incl. the pinned scratch block) an equal-bytes
+    pool holds at ``kv_dtype`` — the capacity side of the quantized-KV
+    trade that ``benchmarks/kvquant_bench.py`` gates."""
+    per_block = block_size * kv_token_bytes(n_kv, head_dim, sites, kv_dtype)
+    return max(2, pool_bytes // per_block)
 
 
 class KVCacheOOM(RuntimeError):
@@ -97,12 +135,19 @@ class PagedKVCache:
     """
 
     def __init__(self, num_blocks: int, block_size: int, slots: int,
-                 max_len: int):
+                 max_len: int, kv_dtype: str = "fp32"):
         if num_blocks < 2:
             raise ValueError(f"need >= 2 blocks (block 0 is the pinned "
                              f"scratch block), got {num_blocks}")
         if block_size < 1 or slots < 1 or max_len < 1:
             raise ValueError("block_size, slots and max_len must be >= 1")
+        # Storage grid of the pool this allocator fronts. The allocator
+        # itself is dtype-blind — every device op is a tree.map over
+        # block axis 1, and quantized pools just carry extra scale
+        # leaves with the same axis layout, so swap/CoW/export round-trip
+        # codes+scales bit-exactly for free — but the dtype is recorded
+        # here so sizing (``kv_token_bytes``) and the engine agree.
+        self.kv_dtype = quant.spec(kv_dtype).name
         self.num_blocks = num_blocks
         self.block_size = block_size
         self.slots = slots

@@ -48,7 +48,7 @@ class Trainer:
                  batch_fn: Callable[[int], Any],
                  jit_kwargs: dict | None = None,
                  backend: str = "jit", pim_tech: str = "proposed",
-                 weight_dtype: str = "fp32",
+                 weight_dtype: str = "fp32", act_dtype: str = "fp32",
                  microbatches: int = 1, partitions: int = 1,
                  loss_fn: Callable | None = None, optimizer=None,
                  pim_compile: dict | None = None):
@@ -75,6 +75,10 @@ class Trainer:
         opaque ``train_step`` cannot be split); losses match the jit
         backend to fp32 tolerance because a mean over equal microbatch
         means is the full-batch mean.
+
+        ``act_dtype`` (pim backend only) prices inter-stage activation
+        transfers on the modeled NoC at the reduced width from
+        ``core.quant`` — compute stays fp32, only ``t_xfer`` shrinks.
 
         ``weight_dtype`` (pim backend only) stores placed weights on a
         reduced-precision grid (``int8`` / ``fp8_e4m3`` / ``fp8_e5m2`` /
@@ -115,15 +119,21 @@ class Trainer:
             raise ValueError(
                 "weight_dtype only applies to backend='pim' (the jit "
                 "backend has no placed weight grid to quantize)")
+        if backend != "pim" and act_dtype != "fp32":
+            raise ValueError(
+                "act_dtype only applies to backend='pim' (the jit "
+                "backend has no modeled NoC to narrow transfers on)")
         self._pim_compile = dict(pim_compile or {})
         self.weight_dtype = weight_dtype
+        self.act_dtype = act_dtype
         if backend == "jit":
             self._step_fn = jax.jit(train_step, **(jit_kwargs or {}))
         elif backend == "pim" and not pipelined:
             from repro import mapper
             sched = mapper.build_schedule(train_step, params, opt_state,
                                           batch_fn(0), tech=pim_tech,
-                                          weight_dtype=weight_dtype)
+                                          weight_dtype=weight_dtype,
+                                          act_dtype=act_dtype)
             # use_cache=False: the global program cache keys on fn
             # identity, and this per-instance train_step closure would
             # never hit but would be pinned (params and all) forever
@@ -133,7 +143,7 @@ class Trainer:
         elif backend == "pim":
             self._step_fn = self._build_pipelined_step(
                 params, batch_fn(0), loss_fn, optimizer, pim_tech,
-                weight_dtype)
+                weight_dtype, act_dtype)
         else:
             raise ValueError(f"backend must be 'jit' or 'pim', "
                              f"got {backend!r}")
@@ -152,7 +162,8 @@ class Trainer:
 
     def _build_pipelined_step(self, params, batch0, loss_fn, optimizer,
                               pim_tech: str,
-                              weight_dtype: str = "fp32") -> Callable:
+                              weight_dtype: str = "fp32",
+                              act_dtype: str = "fp32") -> Callable:
         """Compile the partitioned microbatch-pipeline step (see
         ``__init__``). Traces ``loss_fn`` at microbatch shape, cuts it
         into ``self.partitions`` stage programs, and returns a jitted
@@ -188,7 +199,7 @@ class Trainer:
         sched = mapper.build_schedule(
             loss_fn, mapper.abstract_like(params), *mb_abstract,
             tech=pim_tech, weight_dtype=weight_dtype,
-            partitions=self.partitions)
+            act_dtype=act_dtype, partitions=self.partitions)
         # use_cache=False for the same pinning reason as the whole-step
         # path: per-instance params would live in the global cache forever
         prog = mapper.compile_partitioned(sched, use_cache=False,

@@ -1,0 +1,375 @@
+"""Quantized activation & KV datapath: fp8/int8 KV storage round-trips
+and budgets, reduced-width NoC pricing, priority preemption, and the
+eviction/swap interplay the capacity win depends on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs, mapper, obs
+from repro.core import quant
+from repro.models import attention
+from repro.models.transformer import build_model
+from repro.serve import KVCacheOOM, Request, ServeEngine
+from repro.serve.kv import (PagedKVCache, blocks_for_bytes, kv_token_bits,
+                            kv_token_bytes)
+
+DTYPES = ("int8", "fp8_e4m3", "fp8_e5m2", "fp16")
+
+
+@pytest.fixture(autouse=True)
+def _disabled_tracer():
+    obs.disable()
+    yield
+    obs.disable()
+
+
+@pytest.fixture(scope="module")
+def llama():
+    cfg = configs.get_smoke_config("llama3-8b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("batch", 2)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("paged", True)
+    kw.setdefault("kv_block_size", 8)
+    kw.setdefault("kv_blocks", 24)
+    return ServeEngine(cfg, params, **kw)
+
+
+def _run(eng, prompts, max_tokens=4, **req_kw):
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=np.asarray(p, np.int32),
+                           max_tokens=max_tokens, **req_kw))
+    done = eng.run()
+    return {r.rid: list(r.out) for r in done}
+
+
+PROMPTS = ([1, 2, 3, 4, 5], [7, 8, 9])
+
+
+# ---------------------------------------------------------------------------
+# quantize_kv / dequantize_kv primitives
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_quantize_kv_roundtrip_within_budget(dtype):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((3, 5, 2, 8)) * 3.0, jnp.float32)
+    codes, scale = quant.quantize_kv(x, dtype)
+    assert codes.dtype == quant.code_dtype(dtype)
+    assert scale.shape == x.shape[:-1] + (1,)
+    dq = quant.dequantize_kv(codes, scale, dtype)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    rel = float(jnp.max(jnp.abs(dq - x) / jnp.maximum(amax, 1e-20)))
+    assert rel <= quant.layer_error_budget(dtype), (dtype, rel)
+
+
+def test_quantize_kv_fp32_is_identity():
+    x = jnp.arange(24, dtype=jnp.float32).reshape(2, 3, 4)
+    codes, scale = quant.quantize_kv(x, "fp32")
+    assert codes.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(scale), 1.0)
+    dq = quant.dequantize_kv(codes, scale, "fp32")
+    np.testing.assert_array_equal(np.asarray(dq), np.asarray(x))
+
+
+def test_kv_sizing_helpers():
+    # llama3-8b smoke: 2 kv heads x head_dim 16, 2 attention sites
+    g, d, sites = 2, 16, 2
+    assert kv_token_bits(g, d, "fp32") == 2 * g * d * 32
+    assert kv_token_bits(g, d, "int8") == 2 * g * (d * 8 + 32)
+    assert kv_token_bits(g, d, "int8") < kv_token_bits(g, d, "fp32")
+    assert kv_token_bytes(g, d, sites, "fp32") == sites * 2 * g * d * 4
+    assert kv_token_bytes(g, d, sites, "fp8_e4m3") == sites * 2 * g * (d + 4)
+    pool = 10 * 8 * kv_token_bytes(g, d, sites, "fp32")
+    b32 = blocks_for_bytes(pool, 8, g, d, sites, "fp32")
+    b8 = blocks_for_bytes(pool, 8, g, d, sites, "fp8_e4m3")
+    assert b32 == 10
+    assert b8 / b32 >= 1.8          # the bench's capacity gate, in vitro
+
+
+# ---------------------------------------------------------------------------
+# engine decode paths
+# ---------------------------------------------------------------------------
+
+
+def test_fp32_kv_dtype_bit_identical(llama):
+    cfg, model, params = llama
+    base = _run(_engine(cfg, params), PROMPTS)
+    explicit = _engine(cfg, params, kv_dtype="fp32")
+    # fp32 pools keep exactly the legacy {k, v} leaves — no scale leaves
+    for site in explicit.cache["layers"].values():
+        assert sorted(site) == ["k", "v"]
+    assert _run(explicit, PROMPTS) == base
+
+
+def test_int8_kv_token_parity_jit(llama):
+    cfg, model, params = llama
+    base = _run(_engine(cfg, params), PROMPTS)
+    q = _engine(cfg, params, kv_dtype="int8")
+    for site in q.cache["layers"].values():
+        assert sorted(site) == ["k", "k_scale", "v", "v_scale"]
+        assert site["k"].dtype == jnp.int8
+    assert _run(q, PROMPTS) == base
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8_e4m3"])
+def test_quantized_kernel_vs_xla_token_parity(llama, kv_dtype):
+    cfg, model, params = llama
+    xla = _run(_engine(cfg, params, kv_dtype=kv_dtype), PROMPTS)
+    kern = _run(_engine(cfg, params, kv_dtype=kv_dtype, attn_kernel=True),
+                PROMPTS)
+    assert kern == xla
+
+
+def test_prefill_batch_vs_replay_parity_quantized(llama):
+    cfg, model, params = llama
+    prompts = ([1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11], [5, 4, 3, 2, 1])
+    replay = _run(_engine(cfg, params, kv_dtype="fp8_e4m3"), prompts)
+    batch = _run(_engine(cfg, params, kv_dtype="fp8_e4m3",
+                         prefill="batch"), prompts)
+    assert batch == replay
+
+
+def test_swap_roundtrip_token_identity_quantized(llama):
+    cfg, model, params = llama
+    roomy = _run(_engine(cfg, params, kv_dtype="int8"), PROMPTS,
+                 max_tokens=10)
+    tight = _engine(cfg, params, kv_dtype="int8", kv_block_size=4,
+                    kv_blocks=6, scheduler="continuous",
+                    admission="kv", preempt=True)
+    out = _run(tight, PROMPTS, max_tokens=10)
+    assert tight.preemptions >= 1      # codes+scales actually swapped
+    assert out == roomy
+
+
+def test_quantized_kv_requires_paged(llama):
+    cfg, model, params = llama
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(cfg, params, batch=2, max_len=32, kv_dtype="int8")
+    with pytest.raises(ValueError):
+        _engine(cfg, params, kv_dtype="int7")
+
+
+def test_act_dtype_requires_pim(llama):
+    cfg, model, params = llama
+    with pytest.raises(ValueError, match="pim"):
+        _engine(cfg, params, act_dtype="fp8_e4m3")
+
+
+# ---------------------------------------------------------------------------
+# priority-aware preemption + swap gauge
+# ---------------------------------------------------------------------------
+
+
+def _preempt_engine(cfg, params):
+    return ServeEngine(cfg, params, batch=3, max_len=24, paged=True,
+                       kv_block_size=4, kv_blocks=10,
+                       scheduler="continuous", admission="kv",
+                       preempt=True)
+
+
+def test_preemption_victim_honors_priority(llama):
+    cfg, model, params = llama
+    prompts = ([1, 2, 3, 4, 5, 6, 7], [11, 12, 13, 14, 15, 16, 17],
+               [21, 22, 23, 24, 25, 26, 27])
+    # low-priority B (submitted second) must yield before high-priority C
+    # (youngest) once the pool dries up
+    eng = _preempt_engine(cfg, params)
+    for i, (p, prio) in enumerate(zip(prompts, (0, 0, 1))):
+        eng.submit(Request(rid=i, prompt=np.asarray(p, np.int32),
+                           max_tokens=10, priority=prio))
+    done = {r.rid: r for r in eng.run()}
+    assert eng.preemptions >= 1
+    assert done[2].preemptions == 0   # the priority-1 request never yields
+    assert done[1].preemptions >= 1   # class-0, youngest within its class
+
+    # all-default priorities preserve the legacy youngest-first choice
+    eng = _preempt_engine(cfg, params)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=np.asarray(p, np.int32),
+                           max_tokens=10))
+    done = {r.rid: r for r in eng.run()}
+    assert eng.preemptions >= 1
+    assert done[0].preemptions == 0   # the oldest admission survives
+    assert done[2].preemptions >= 1   # the youngest yields first
+
+
+def test_swapped_blocks_gauge(llama):
+    cfg, model, params = llama
+    obs.metrics().reset()
+    eng = _preempt_engine(cfg, params)
+    swapped_peaks = []
+    prompts = ([1, 2, 3, 4, 5, 6, 7], [11, 12, 13, 14, 15, 16, 17],
+               [21, 22, 23, 24, 25, 26, 27])
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=np.asarray(p, np.int32),
+                           max_tokens=10))
+    while eng.queue or any(s is not None for s in eng.slots):
+        eng.tick_once()
+        swapped_peaks.append(eng.swapped_blocks)
+    g = obs.metrics().snapshot()["gauges"]["serve.kv_swapped_blocks"]
+    assert g == 0.0                   # fully drained pool at the end
+    assert eng.preemptions >= 1 and max(swapped_peaks) >= 1
+
+
+# ---------------------------------------------------------------------------
+# eviction racing swap_out / swap_in (the capacity win's corner case)
+# ---------------------------------------------------------------------------
+
+
+def test_lru_eviction_between_swap_out_and_swap_in():
+    # 7 blocks: scratch + 6 usable; block_size 2. Slot 0's two full
+    # prompt blocks become ref-0 *evictable* prefix blocks after
+    # swap_out; slot 1 then drains the free list and consumes one of
+    # them via LRU eviction. swap_in must notice the broken chain and
+    # restore from its scratch pages instead of re-attaching a
+    # repurposed block.
+    kv = PagedKVCache(7, 2, slots=2, max_len=10, kv_dtype="int8")
+    cache = {"k": jnp.zeros((1, 7, 2, 1, 3), jnp.int8),
+             "k_scale": jnp.zeros((1, 7, 2, 1, 1), jnp.float32)}
+    prompt = np.array([1, 2, 3, 4], np.int32)
+
+    assert kv.alloc_slot(0, prompt) == 0
+    for pos in range(4):
+        cache = kv.ensure(cache, 0, pos)
+        bid = int(kv.table[0, pos // 2])
+        cache = {
+            "k": cache["k"].at[:, bid, pos % 2].set(pos + 1),
+            "k_scale": cache["k_scale"].at[:, bid, pos % 2].set(pos + 1.0),
+        }
+        kv.note_filled(0, pos)
+    assert kv.lookup_prefix(np.array([1, 2, 3, 4, 5], np.int32)) == 4
+
+    saved = kv.swap_out(cache, 0)
+    assert saved.n_blocks == 2
+    assert kv.available_blocks == 6   # 4 free + 2 evictable cached
+
+    # slot 1 swallows the free list, then evicts slot 0's LRU prefix
+    assert kv.alloc_slot(1, np.array([9, 9, 9], np.int32)) == 0
+    for pos in range(10):
+        cache = kv.ensure(cache, 1, pos)
+        bid = int(kv.table[1, pos // 2])
+        cache = {
+            "k": cache["k"].at[:, bid, pos % 2].set(99),
+            "k_scale": cache["k_scale"].at[:, bid, pos % 2].set(99.0),
+        }
+    assert kv.stats["evicted_blocks"] >= 1
+    # the chain head was evicted, so the cached prefix no longer covers
+    # anything (chain hashes are cumulative) even though the second
+    # chunk's block is still resident
+    assert kv.lookup_prefix(np.array([1, 2, 3, 4, 5], np.int32)) == 0
+
+    # the evicting request drains; the victim resumes into the pool it
+    # left — nothing of its broken chain may be re-attached
+    kv.free_slot(1)
+    cache, shared = kv.swap_in(cache, 0, prompt, saved)
+    assert shared == 0                # nothing re-attached from the chain
+    seen = set()
+    for bi, content in saved.pages:
+        bid = int(kv.table[0, bi])
+        assert bid >= 0 and bid not in seen
+        seen.add(bid)
+        assert kv.ref[bid] == 1       # private restored block, not shared
+        for leaf in ("k", "k_scale"):
+            np.testing.assert_array_equal(
+                np.asarray(cache[leaf][:, bid]), content[leaf])
+
+
+def test_swap_in_reattaches_surviving_prefix():
+    # same setup, but nothing evicts while swapped: swap_in re-attaches
+    # both cached prefix blocks by reference and restores zero pages
+    kv = PagedKVCache(7, 2, slots=2, max_len=10)
+    cache = {"k": jnp.zeros((1, 7, 2, 1, 3), jnp.float32)}
+    prompt = np.array([1, 2, 3, 4], np.int32)
+    kv.alloc_slot(0, prompt)
+    for pos in range(4):
+        cache = kv.ensure(cache, 0, pos)
+        kv.note_filled(0, pos)
+    saved = kv.swap_out(cache, 0)
+    restored_before = kv.stats["swapped_in_blocks"]
+    cache, shared = kv.swap_in(cache, 0, prompt, saved)
+    # the chain covers all but the final prompt token's block (decode
+    # must replay that one): chunk 0 re-attaches, chunk 1 restores
+    assert shared == 2
+    assert kv.stats["swapped_in_blocks"] == restored_before + 1
+
+
+# ---------------------------------------------------------------------------
+# dequant error measurement + drift report
+# ---------------------------------------------------------------------------
+
+
+def test_kv_dequant_errors_within_budget_and_in_drift_report(llama):
+    cfg, model, params = llama
+    obs.metrics().reset()
+    prompts = ([1, 2, 3, 4, 5, 6, 7, 8], [8, 7, 6, 5, 4, 3, 2, 1])
+    golden = _engine(cfg, params)
+    quantized = _engine(cfg, params, kv_dtype="fp8_e4m3", backend="pim")
+    _run(golden, prompts, max_tokens=1)
+    with obs.scoped() as tr:
+        _run(quantized, prompts, max_tokens=1)
+        errs = quantized.kv_dequant_errors(golden)
+        rep = quantized.drift_report(tr)
+    assert errs.shape == (cfg.n_layers,)
+    assert float(errs.max()) <= quant.layer_error_budget("fp8_e4m3")
+    assert rep.kv_dequant_error is not None
+    assert rep.kv_dequant_error["count"] == len(errs)
+    assert rep.to_dict()["kv_dequant_error"]["count"] == len(errs)
+
+
+# ---------------------------------------------------------------------------
+# act_dtype: reduced-width NoC pricing on the modeled schedule
+# ---------------------------------------------------------------------------
+
+
+def _matmul_chain(w1, w2, w3, x):
+    return jnp.tanh(jnp.tanh(x @ w1) @ w2) @ w3
+
+
+def _sched(act_dtype):
+    args = (jnp.ones((64, 64), jnp.float32), jnp.ones((64, 64), jnp.float32),
+            jnp.ones((64, 64), jnp.float32), jnp.ones((8, 64), jnp.float32))
+    return mapper.build_schedule(_matmul_chain, *args, act_dtype=act_dtype)
+
+
+def test_act_dtype_prices_transfers_narrower():
+    obs.metrics().reset()
+    s32, s8 = _sched("fp32"), _sched("int8")
+    assert s32.act_bits == 32 and s8.act_bits == 8
+    x32 = sum(st.t_transfer_s for st in s32.stages)
+    x8 = sum(st.t_transfer_s for st in s8.stages)
+    assert 0 < x8 < x32
+    assert s8.report.latency_s <= s32.report.latency_s
+    for s in (s32, s8):
+        rec = s.reconcile()
+        assert rec["counts_match"] and rec["latency_ge_ideal"], rec
+    assert obs.metrics().snapshot()["gauges"]["pim.act_bits"] == 8.0
+
+
+def test_program_cache_keys_on_act_bits():
+    from repro.mapper.compile import _program_key
+    s32, s8 = _sched("fp32"), _sched("int8")
+    k32 = _program_key(s32, 128, True, False, False)
+    k8 = _program_key(s8, 128, True, False, False)
+    assert k32 != k8
+
+
+def test_kv_traffic_priced_at_storage_width(llama):
+    cfg, model, params = llama
+    e32 = _engine(cfg, params, backend="pim", kv_dtype="fp32")
+    e8 = _engine(cfg, params, backend="pim", kv_dtype="int8")
+    assert 0 < e8.schedule.kv.t_s < e32.schedule.kv.t_s
+    rec = e8.schedule.reconcile()
+    assert rec["counts_match"] and rec["latency_ge_ideal"], rec
+    # pim decode with quantized KV stays token-identical to jit decode
+    assert _run(e8, PROMPTS) == _run(_engine(cfg, params,
+                                             kv_dtype="int8"), PROMPTS)
